@@ -1,0 +1,3 @@
+"""repro: densest subgraph in streaming and MapReduce, as a production JAX framework."""
+
+__version__ = "1.0.0"

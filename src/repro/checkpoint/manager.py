@@ -1,0 +1,182 @@
+"""Fault-tolerant checkpointing (no orbax offline — built on numpy + msgpack).
+
+Production properties implemented here:
+
+  * ATOMIC: write to ``<dir>/tmp.<step>/`` then ``os.replace`` to
+    ``step_<n>/`` — a preempted writer never corrupts the latest checkpoint;
+  * MESH-INDEPENDENT: arrays are saved as full (addressable-gathered) numpy
+    buffers with a pytree manifest, so a restore may use a different mesh
+    shape / device count (elastic rescale restores then re-shards);
+  * ASYNC: ``save_async`` snapshots to host memory synchronously (cheap) and
+    writes in a daemon thread, overlapping I/O with the next training steps —
+    a step watchdog or SIGTERM handler can still join() the writer;
+  * KEEP-K: old checkpoints garbage-collected after a successful save;
+  * SELF-DESCRIBING: manifest.msgpack stores the treedef, shapes, dtypes and
+    user metadata (step, rng state, data-pipeline cursor) for restart.
+
+On a real multi-host pod each host writes only its addressable shards and a
+process-0 barrier commits the manifest; the single-process layout here keeps
+the same two-phase commit structure (documented in DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _tree_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append((jax.tree_util.keystr(path), leaf))
+    return out
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    state: Any,
+    metadata: Optional[Dict[str, Any]] = None,
+    keep: int = 3,
+) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    arrays = {}
+    manifest = {"step": int(step), "metadata": metadata or {}, "leaves": []}
+    for key, leaf in _tree_paths(state):
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[key] = arr
+        manifest["leaves"].append(
+            {"key": key, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"tmp.{step}.{os.getpid()}")
+    final = os.path.join(directory, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    # npz holds every leaf; keys are sanitized tree paths.
+    np.savez(os.path.join(tmp, "arrays.npz"), **{k: v for k, v in arrays.items()})
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest, use_bin_type=True))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic commit
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(all_steps(directory))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)
+
+
+def all_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(directory, name, "manifest.msgpack")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def restore_checkpoint(
+    directory: str,
+    step: int,
+    like: Any,
+    shardings: Any = None,
+) -> Tuple[Any, Dict[str, Any]]:
+    """Restores into the structure of ``like``; re-shards onto ``shardings``
+    (pytree of NamedSharding / None) if given — the elastic-rescale path."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read(), raw=False)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_flat = (
+        jax.tree.leaves(shardings, is_leaf=lambda x: x is None or hasattr(x, "spec"))
+        if shardings is not None
+        else [None] * len(flat)
+    )
+    leaves = []
+    for (kpath, leaf), sh in zip(flat, shard_flat):
+        key = jax.tree_util.keystr(kpath)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{key}: checkpoint {arr.shape} != expected {want_shape}")
+        if sh is not None:
+            leaves.append(jax.device_put(arr, sh))
+        else:
+            leaves.append(jnp.asarray(arr))
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    return state, manifest["metadata"]
+
+
+def restore_latest(directory: str, like: Any, shardings: Any = None):
+    steps = all_steps(directory)
+    if not steps:
+        return None, None, -1
+    state, meta = restore_checkpoint(directory, steps[-1], like, shardings)
+    return state, meta, steps[-1]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Async keep-k checkpointer with a join()-able writer thread."""
+
+    directory: str
+    keep: int = 3
+    _thread: Optional[threading.Thread] = None
+    _error: Optional[BaseException] = None
+
+    def save_async(self, step: int, state: Any, metadata=None):
+        """Snapshot to host now, write in background."""
+        self.join()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def _write():
+            try:
+                save_checkpoint(
+                    self.directory, step, host_state, metadata, keep=self.keep
+                )
+            except BaseException as e:  # surfaced on next join()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def save(self, step: int, state: Any, metadata=None):
+        self.join()
+        return save_checkpoint(self.directory, step, state, metadata, keep=self.keep)
+
+    def join(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def latest_step(self) -> int:
+        steps = all_steps(self.directory)
+        return steps[-1] if steps else -1

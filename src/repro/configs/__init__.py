@@ -1,0 +1,4 @@
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.configs.registry import all_archs, assigned_cells, get_arch
+
+__all__ = ["ArchSpec", "ShapeSpec", "all_archs", "assigned_cells", "get_arch"]

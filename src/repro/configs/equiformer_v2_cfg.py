@@ -1,0 +1,21 @@
+"""equiformer-v2 [arXiv:2306.12059]: 12L d_hidden=128 l_max=6 m_max=2 8H,
+eSCN-style SO(2) convolutions (see DESIGN.md for the l>=2 frame-alignment
+deviation)."""
+
+import dataclasses
+
+from repro.configs.base import ArchSpec, gnn_shapes
+from repro.models.gnn.equiformer_v2 import EQ2_PARAM_RULES, EquiformerV2Config
+
+CONFIG = EquiformerV2Config(n_layers=12, d_hidden=128, l_max=6, m_max=2, n_heads=8)
+REDUCED = dataclasses.replace(CONFIG, n_layers=2, d_hidden=32, l_max=3, n_heads=4)
+
+SPEC = ArchSpec(
+    arch_id="equiformer-v2",
+    family="gnn",
+    config=CONFIG,
+    reduced_config=REDUCED,
+    param_rules=EQ2_PARAM_RULES,
+    shapes=gnn_shapes({"molecule": 16}),
+    notes="per-m SO(2) matmuls restricted to |m|<=2; 49 spherical components",
+)

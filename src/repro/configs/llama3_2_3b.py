@@ -1,0 +1,56 @@
+"""llama3.2-3b [hf:meta-llama/Llama-3.2-1B-family; unverified]:
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256, SwiGLU, RoPE,
+tied embeddings."""
+
+import dataclasses
+
+from repro.configs.base import ArchSpec, lm_shapes
+from repro.models.transformer import LM_PARAM_RULES, TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="llama3.2-3b",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=8192,
+    vocab=128256,
+    mlp_type="swiglu",
+    norm="rmsnorm",
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
+    d_ff=256, vocab=512,
+)
+
+SPEC = ArchSpec(
+    arch_id="llama3.2-3b",
+    family="lm",
+    config=CONFIG,
+    reduced_config=REDUCED,
+    param_rules=LM_PARAM_RULES,
+    shapes=lm_shapes(
+        long_skip_reason=(
+            "pure full-attention arch: 524k-token KV with quadratic attention "
+            "is excluded per assignment (see DESIGN.md long_500k skips)"
+        )
+    ),
+    rule_overrides={
+        # Perf iteration (EXPERIMENTS.md §Perf): pure FSDP over all 256 chips
+        # for training — collective traffic becomes weight-proportional
+        # (~0.6 TB/dev) instead of activation-proportional (~4 TB/dev at
+        # batch 1M tokens). TP layouts remain for prefill/decode kinds.
+        "train": {
+            "batch": ("data", "model"), "fsdp": ("data", "model"),
+            "tp": None, "heads4": None, "kv_heads": None, "heads": None,
+            "mlp": None, "vocab": None, "embed": None, "seq": None,
+        },
+    },
+    # flat d_q=3072 divides 16; 4D attention shards unevenly on heads4
+    # (24 -> pad 32, 1.33x) — far cheaper than replicated attention (16x).
+    notes="tied embeddings; GQA 24/8; uneven heads4 sharding (24 -> 32 pad)",
+)

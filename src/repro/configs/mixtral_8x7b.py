@@ -1,0 +1,67 @@
+"""mixtral-8x7b [arXiv:2401.04088]: 32L d_model=4096 32H (GQA kv=8)
+d_ff=14336 vocab=32000, MoE 8 experts top-2, sliding-window attention 4096.
+
+SWA makes the long_500k decode cell O(window): the rolling KV cache holds
+4096 slots regardless of the 524k context."""
+
+import dataclasses
+
+from repro.configs.base import ArchSpec, lm_shapes
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LM_PARAM_RULES, TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="mixtral-8x7b",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=14336,
+    vocab=32000,
+    mlp_type="swiglu",
+    norm="rmsnorm",
+    rope_theta=1_000_000.0,
+    window=4096,
+    moe=MoEConfig(n_experts=8, top_k=2, capacity_factor=1.25, group_size=1024),
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
+    d_ff=256, vocab=512, window=64,
+    moe=MoEConfig(n_experts=4, top_k=2, capacity_factor=1.25, group_size=64),
+)
+
+SPEC = ArchSpec(
+    arch_id="mixtral-8x7b",
+    family="lm",
+    config=CONFIG,
+    reduced_config=REDUCED,
+    param_rules=LM_PARAM_RULES,
+    shapes=lm_shapes(long_skip_reason=None),  # SWA => sub-quadratic: runs
+    rule_overrides={
+        # 8 experts % 16 devices != 0 -> experts replicated, expert FFN is TP
+        # over 'model' (d_ff 14336 / 16 = 896).
+        "*": {"expert": None},
+        # Perf iteration (EXPERIMENTS.md §Perf): FSDP-256 for training — at
+        # 47B params the weight gathers (~0.6 TB/dev) still beat TP's
+        # activation collectives (~2.4 TB/dev) at the 1M-token batch.
+        # (Refuted for llama4's 774B params, which stays EP: weight traffic
+        # dominates there.)
+        "train": {
+            "batch": ("data", "model"), "fsdp": ("data", "model"),
+            "tp": None, "heads4": None, "kv_heads": None, "heads": None,
+            "mlp": None, "vocab": None, "embed": None, "seq": None,
+            "expert": None, "expert_batch": None,
+        },
+        # batch=1 long-decode: no data parallelism available; spread TP over
+        # both axes (d_ff 14336 % 256 == 0, vocab 32000 % 256 == 0).
+        "decode_long": {
+            "expert": None, "batch": None, "fsdp": None,
+            "tp": ("data", "model"), "kv_seq": ("model",),
+            "heads": None, "kv_heads": None, "mlp": ("data", "model"),
+            "vocab": ("data", "model"),
+        },
+    },
+    notes="SWA 4096 rolling cache; MoE 8e top-2 with TP-sharded experts",
+)

@@ -1,0 +1,52 @@
+"""qwen2-72b [arXiv:2407.10671]: 80L d_model=8192 64H (GQA kv=8)
+d_ff=29568 vocab=152064, SwiGLU, RMSNorm, QKV bias, RoPE."""
+
+import dataclasses
+
+from repro.configs.base import ArchSpec, lm_shapes
+from repro.models.transformer import LM_PARAM_RULES, TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="qwen2-72b",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=29568,
+    vocab=152064,
+    mlp_type="swiglu",
+    norm="rmsnorm",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, d_head=16,
+    d_ff=384, vocab=512,
+)
+
+SPEC = ArchSpec(
+    arch_id="qwen2-72b",
+    family="lm",
+    config=CONFIG,
+    reduced_config=REDUCED,
+    param_rules=LM_PARAM_RULES,
+    shapes=lm_shapes(
+        long_skip_reason=(
+            "pure full-attention arch: 524k decode excluded; see DESIGN.md"
+        )
+    ),
+    rule_overrides={
+        # Perf iteration (EXPERIMENTS.md §Perf): pure FSDP over all 256 chips
+        # for training — collective traffic becomes weight-proportional
+        # (~0.6 TB/dev) instead of activation-proportional (~4 TB/dev at
+        # batch 1M tokens). TP layouts remain for prefill/decode kinds.
+        "train": {
+            "batch": ("data", "model"), "fsdp": ("data", "model"),
+            "tp": None, "heads4": None, "kv_heads": None, "heads": None,
+            "mlp": None, "vocab": None, "embed": None, "seq": None,
+        },
+    },
+    notes="64 q heads / 16 = 4 per shard; kv=8 heads sharded on flattened dim",
+)

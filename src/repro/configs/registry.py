@@ -1,0 +1,70 @@
+"""Architecture registry: ``--arch <id>`` resolution for launch/dryrun/train."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchSpec
+
+
+def _load() -> Dict[str, ArchSpec]:
+    from repro.configs import (
+        densest_mapreduce,
+        egnn_cfg,
+        equiformer_v2_cfg,
+        graphsage_reddit,
+        llama3_2_3b,
+        llama4_maverick_400b,
+        mace_cfg,
+        mixtral_8x7b,
+        qwen2_72b,
+        starcoder2_7b,
+        two_tower_retrieval,
+    )
+
+    specs = [
+        llama3_2_3b.SPEC,
+        starcoder2_7b.SPEC,
+        qwen2_72b.SPEC,
+        mixtral_8x7b.SPEC,
+        llama4_maverick_400b.SPEC,
+        mace_cfg.SPEC,
+        egnn_cfg.SPEC,
+        graphsage_reddit.SPEC,
+        equiformer_v2_cfg.SPEC,
+        two_tower_retrieval.SPEC,
+        densest_mapreduce.SPEC,
+    ]
+    return {s.arch_id: s for s in specs}
+
+
+_REGISTRY: Dict[str, ArchSpec] | None = None
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    global _REGISTRY
+    if _REGISTRY is None:
+        _REGISTRY = _load()
+    if arch_id not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> Dict[str, ArchSpec]:
+    global _REGISTRY
+    if _REGISTRY is None:
+        _REGISTRY = _load()
+    return dict(_REGISTRY)
+
+
+def assigned_cells(include_densest: bool = False):
+    """The 40 assigned (arch x shape) cells (+ optional paper-workload cells)."""
+    cells = []
+    for arch_id, spec in all_archs().items():
+        if spec.family == "densest" and not include_densest:
+            continue
+        for shape_name in spec.shapes:
+            cells.append((arch_id, shape_name))
+    return cells

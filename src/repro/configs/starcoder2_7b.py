@@ -1,0 +1,55 @@
+"""starcoder2-7b [arXiv:2402.19173]: 32L d_model=4608 36H (GQA kv=4)
+d_ff=18432 vocab=49152, GELU MLP, LayerNorm, qkv-bias, RoPE."""
+
+import dataclasses
+
+from repro.configs.base import ArchSpec, lm_shapes
+from repro.models.transformer import LM_PARAM_RULES, TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="starcoder2-7b",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv_heads=4,
+    d_head=128,
+    d_ff=18432,
+    vocab=49152,
+    mlp_type="gelu",
+    norm="layernorm",
+    qkv_bias=True,
+    rope_theta=100_000.0,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=144, n_heads=6, n_kv_heads=2, d_head=24,
+    d_ff=288, vocab=512,
+)
+
+SPEC = ArchSpec(
+    arch_id="starcoder2-7b",
+    family="lm",
+    config=CONFIG,
+    reduced_config=REDUCED,
+    param_rules=LM_PARAM_RULES,
+    shapes=lm_shapes(
+        long_skip_reason=(
+            "pure full-attention arch (assigned config): 524k decode excluded; "
+            "see DESIGN.md long_500k skips"
+        )
+    ),
+    rule_overrides={
+        # Perf iteration (EXPERIMENTS.md §Perf): pure FSDP over all 256 chips
+        # for training — collective traffic becomes weight-proportional
+        # (~0.6 TB/dev) instead of activation-proportional (~4 TB/dev at
+        # batch 1M tokens). TP layouts remain for prefill/decode kinds.
+        "train": {
+            "batch": ("data", "model"), "fsdp": ("data", "model"),
+            "tp": None, "heads4": None, "kv_heads": None, "heads": None,
+            "mlp": None, "vocab": None, "embed": None, "seq": None,
+        },
+    },
+    # flat d_q=4608 and d_kv=512 both divide 16; 4D heads shard unevenly
+    # (36 -> pad 48) via the heads4 axis inside attention.
+    notes="GELU MLP + LayerNorm + qkv bias per StarCoder2",
+)

@@ -1,0 +1,71 @@
+"""Core library: the paper's densest-subgraph algorithms.
+
+Public API:
+  densest_subgraph                 Algorithm 1 (undirected, (2+2eps)-approx)
+  densest_subgraph_at_least_k      Algorithm 2 (size >= k, (3+3eps)-approx)
+  densest_subgraph_directed        Algorithm 3 (directed, per-c)
+  densest_directed_search          Algorithm 3 + geometric c grid
+  densest_subgraph_sketched        Algorithm 1 with Count-Sketch degrees
+  densest_subgraph_distributed     MapReduce analogue on a device mesh
+  StreamingDensest                 semi-streaming driver w/ checkpoint+stragglers
+  densest_subgraph_exact           Goldberg max-flow exact oracle
+  charikar_greedy                  node-at-a-time 2-approx baseline [10]
+"""
+
+from repro.core.charikar import charikar_greedy
+from repro.core.countsketch import (
+    densest_subgraph_sketched,
+    make_sketch_params,
+    query_degrees,
+    sketch_degrees_from_edges,
+    sketched_degree_fn,
+)
+from repro.core.density import density_of, max_passes_bound, undirected_stats
+from repro.core.exact import (
+    densest_directed_brute,
+    densest_subgraph_brute,
+    densest_subgraph_exact,
+)
+from repro.core.mapreduce import (
+    densest_subgraph_distributed,
+    make_distributed_directed_peel,
+    make_distributed_peel,
+    shard_edges,
+)
+from repro.core.peel import PeelResult, densest_subgraph, densest_subgraph_sets
+from repro.core.peel_directed import (
+    c_grid,
+    densest_directed_search,
+    densest_directed_search_vmapped,
+    densest_subgraph_directed,
+)
+from repro.core.peel_topk import densest_subgraph_at_least_k
+from repro.core.streaming import StreamingDensest, chunked_from_arrays
+
+__all__ = [
+    "PeelResult",
+    "StreamingDensest",
+    "c_grid",
+    "charikar_greedy",
+    "chunked_from_arrays",
+    "densest_directed_brute",
+    "densest_directed_search",
+    "densest_directed_search_vmapped",
+    "densest_subgraph",
+    "densest_subgraph_at_least_k",
+    "densest_subgraph_brute",
+    "densest_subgraph_directed",
+    "densest_subgraph_distributed",
+    "densest_subgraph_exact",
+    "densest_subgraph_sets",
+    "densest_subgraph_sketched",
+    "density_of",
+    "make_distributed_directed_peel",
+    "make_distributed_peel",
+    "make_sketch_params",
+    "query_degrees",
+    "shard_edges",
+    "sketch_degrees_from_edges",
+    "sketched_degree_fn",
+    "undirected_stats",
+]

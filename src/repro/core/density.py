@@ -1,0 +1,97 @@
+"""Density / induced-degree primitives shared by all peeling algorithms.
+
+These are the paper's three MapReduce building blocks (§5.2):
+  (1) graph density        -> masked reductions,
+  (2) per-node degrees     -> segment_sum over the edge list,
+  (3) node removal         -> alive-bitmap update + edge mask recomputation.
+
+All functions are pure and jit/shard_map friendly.  When run under
+``shard_map`` with edges sharded, callers psum the outputs (see
+core/mapreduce.py); the math is identical, which is exactly the paper's
+observation that every pass only needs associative reductions.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.edgelist import EdgeList
+
+# Degree function signature: (edges, alive_src, alive_dst) -> deg[N]
+DegreeFn = Callable[[EdgeList, jax.Array, jax.Array], jax.Array]
+
+
+class GraphStats(NamedTuple):
+    deg: jax.Array  # float32[N] induced (weighted) degree
+    total_weight: jax.Array  # float32[] sum of alive edge weights |E(S)|
+    n_alive: jax.Array  # int32[] |S|
+    density: jax.Array  # float32[] rho(S); 0 when S is empty
+
+
+def alive_edge_weight(edges: EdgeList, alive: jax.Array) -> jax.Array:
+    """float32[E]: weight for edges whose both endpoints are alive, else 0."""
+    ok = edges.mask & alive[edges.src] & alive[edges.dst]
+    return jnp.where(ok, edges.weight, 0.0)
+
+
+def exact_degrees(edges: EdgeList, w_alive: jax.Array) -> jax.Array:
+    """Induced degrees via segment_sum — the reduce-side count of §5.2."""
+    n = edges.n_nodes
+    deg = jax.ops.segment_sum(w_alive, edges.src, num_segments=n)
+    deg = deg + jax.ops.segment_sum(w_alive, edges.dst, num_segments=n)
+    return deg
+
+
+def undirected_stats(edges: EdgeList, alive: jax.Array) -> GraphStats:
+    """All per-pass statistics of Algorithm 1 in one fused computation."""
+    w_alive = alive_edge_weight(edges, alive)
+    deg = exact_degrees(edges, w_alive)
+    total = jnp.sum(w_alive)
+    n_alive = jnp.sum(alive.astype(jnp.int32))
+    density = jnp.where(n_alive > 0, total / jnp.maximum(n_alive, 1), 0.0)
+    return GraphStats(deg=deg, total_weight=total, n_alive=n_alive, density=density)
+
+
+class DirectedStats(NamedTuple):
+    out_deg: jax.Array  # float32[N] |E(i, T)|
+    in_deg: jax.Array  # float32[N] |E(S, j)|
+    total_weight: jax.Array  # |E(S, T)|
+    n_s: jax.Array
+    n_t: jax.Array
+    density: jax.Array  # |E(S,T)| / sqrt(|S| |T|)
+
+
+def directed_stats(edges: EdgeList, s_alive: jax.Array, t_alive: jax.Array) -> DirectedStats:
+    ok = edges.mask & s_alive[edges.src] & t_alive[edges.dst]
+    w = jnp.where(ok, edges.weight, 0.0)
+    n = edges.n_nodes
+    out_deg = jax.ops.segment_sum(w, edges.src, num_segments=n)
+    in_deg = jax.ops.segment_sum(w, edges.dst, num_segments=n)
+    total = jnp.sum(w)
+    n_s = jnp.sum(s_alive.astype(jnp.int32))
+    n_t = jnp.sum(t_alive.astype(jnp.int32))
+    denom = jnp.sqrt(jnp.maximum(n_s.astype(jnp.float32), 1.0) * jnp.maximum(n_t.astype(jnp.float32), 1.0))
+    density = jnp.where((n_s > 0) & (n_t > 0), total / denom, 0.0)
+    return DirectedStats(out_deg, in_deg, total, n_s, n_t, density)
+
+
+def density_of(edges: EdgeList, alive: jax.Array) -> jax.Array:
+    """rho(S) for a node subset, recomputed from scratch (used for validation)."""
+    return undirected_stats(edges, alive).density
+
+
+def max_passes_bound(n_nodes: int, eps: float, floor: int = 8) -> int:
+    """Static trip-count bound: ceil(log_{1+eps} n) + slack (Lemma 4).
+
+    Capped at n+1: the algorithm removes at least one node per pass (min-
+    degree fallback), so n+1 is a true worst case — and it keeps the bound
+    int32-safe when eps is within float noise of 0."""
+    import math
+
+    if eps <= 0:
+        return int(n_nodes) + 1  # one node per pass worst case (Charikar regime)
+    bound = int(math.ceil(math.log(max(n_nodes, 2)) / math.log1p(eps))) + 4
+    return max(floor, min(bound, int(n_nodes) + 1))

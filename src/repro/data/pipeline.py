@@ -1,0 +1,88 @@
+"""Deterministic, resumable, shard-aware input pipelines.
+
+Every pipeline keys batch generation off (seed, step) — not off mutable
+iterator state — so:
+  * restart at step k reproduces exactly the batch stream from step k
+    (checkpoint stores only the integer cursor);
+  * multi-host sharding is a pure function of (step, host_id): each host
+    materializes only its slice (here: the full batch, single process);
+  * straggler re-issue is trivial: any worker can regenerate any batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticStream:
+    """Resumable iterator over make_fn(rng, step) batches."""
+
+    make_fn: Callable[[np.random.Generator, int], Any]
+    seed: int = 0
+    step: int = 0
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        rng = np.random.default_rng((self.seed << 20) ^ self.step)
+        batch = self.make_fn(rng, self.step)
+        self.step += 1
+        return batch
+
+    def checkpoint_state(self) -> Dict[str, int]:
+        return {"seed": self.seed, "step": self.step}
+
+    def restore(self, state: Dict[str, int]):
+        self.seed = int(state["seed"])
+        self.step = int(state["step"])
+
+
+def lm_token_stream(vocab: int, batch: int, seq: int, seed: int = 0) -> SyntheticStream:
+    """Deterministic Zipfian token stream (power-law unigram, like text)."""
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = 1.0 / ranks**1.1
+    probs /= probs.sum()
+    cum = np.cumsum(probs)
+
+    def make(rng: np.random.Generator, step: int):
+        import jax.numpy as jnp
+
+        u = rng.random((batch, seq + 1))
+        toks = np.searchsorted(cum, u).astype(np.int32)
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+
+    return SyntheticStream(make, seed=seed)
+
+
+def recsys_stream(cfg, batch: int, seed: int = 0) -> SyntheticStream:
+    from repro.data.synthetic import recsys_train_batch
+
+    def make(rng, step):
+        return recsys_train_batch(rng, cfg, batch)
+
+    return SyntheticStream(make, seed=seed)
+
+
+def edge_chunk_stream(
+    src: np.ndarray, dst: np.ndarray, chunk: int, weight: Optional[np.ndarray] = None
+):
+    """Multi-pass edge stream for the semi-streaming driver: yields
+    (src, dst, w) chunks; the SAME chunk boundaries every pass (stable ids
+    for straggler re-issue and per-chunk checksums)."""
+    e = len(src)
+    if weight is None:
+        weight = np.ones(e, np.float32)
+    for s in range(0, e, chunk):
+        yield s // chunk, (
+            src[s : s + chunk],
+            dst[s : s + chunk],
+            weight[s : s + chunk],
+        )

@@ -1,0 +1,328 @@
+"""Synthetic, deterministic, shard-aware input pipelines.
+
+Two views of every batch:
+  * ``abstract_batch``: jax.ShapeDtypeStruct stand-ins (weak-type-correct,
+    shardable, no allocation) — what the multi-pod dry-run lowers against;
+  * ``make_batch``: concrete arrays (small shapes only) for smoke tests,
+    examples and real CPU training runs.
+
+Batch layouts per family are documented next to their builders.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchSpec, ShapeSpec
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def lm_train_batch_spec(vocab: int, batch: int, seq: int) -> Dict[str, Any]:
+    del vocab
+    return {
+        "tokens": _sds((batch, seq), i32),
+        "labels": _sds((batch, seq), i32),
+    }
+
+
+def lm_train_batch(rng: np.random.Generator, vocab: int, batch: int, seq: int):
+    toks = rng.integers(0, vocab, size=(batch, seq + 1), dtype=np.int32)
+    return {
+        "tokens": jnp.asarray(toks[:, :-1]),
+        "labels": jnp.asarray(toks[:, 1:]),
+    }
+
+
+def lm_prefill_spec(batch: int, seq: int) -> Dict[str, Any]:
+    return {"tokens": _sds((batch, seq), i32)}
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+
+def gnn_full_batch_spec(
+    n_nodes: int, n_edges: int, d_feat: int, n_classes: int, with_positions: bool,
+    pad_to: int = 512,
+) -> Dict[str, Any]:
+    """Node/edge counts are padded to a multiple of 512 so the node dim can
+    shard over every mesh axis (single-pod 256, multi-pod 512); padding
+    nodes are isolated (edge_mask False, train_mask 0) so the models'
+    segment ops ignore them."""
+    n_nodes = ((n_nodes + pad_to - 1) // pad_to) * pad_to
+    n_edges = ((n_edges + pad_to - 1) // pad_to) * pad_to
+    b = {
+        "features": _sds((n_nodes, d_feat), f32),
+        "src": _sds((n_edges,), i32),
+        "dst": _sds((n_edges,), i32),
+        "edge_mask": _sds((n_edges,), jnp.bool_),
+        "labels": _sds((n_nodes,), i32),
+        "train_mask": _sds((n_nodes,), f32),
+    }
+    if with_positions:
+        b["positions"] = _sds((n_nodes, 3), f32)
+    return b
+
+
+def gnn_full_batch(
+    rng: np.random.Generator,
+    n_nodes: int,
+    n_edges: int,
+    d_feat: int,
+    n_classes: int,
+    with_positions: bool,
+):
+    src = rng.integers(0, n_nodes, n_edges, dtype=np.int32)
+    dst = rng.integers(0, n_nodes, n_edges, dtype=np.int32)
+    b = {
+        "features": jnp.asarray(rng.standard_normal((n_nodes, d_feat), dtype=np.float32)),
+        "src": jnp.asarray(src),
+        "dst": jnp.asarray(dst),
+        "edge_mask": jnp.asarray(src != dst),
+        "labels": jnp.asarray(rng.integers(0, max(n_classes, 2), n_nodes, dtype=np.int32)),
+        "train_mask": jnp.asarray((rng.random(n_nodes) < 0.5).astype(np.float32)),
+    }
+    if with_positions:
+        b["positions"] = jnp.asarray(
+            rng.standard_normal((n_nodes, 3), dtype=np.float32) * 2.0
+        )
+    return b
+
+
+def gnn_molecule_batch_spec(
+    batch: int, nodes_per: int, edges_per: int, d_feat: int, with_positions: bool
+) -> Dict[str, Any]:
+    n = batch * nodes_per
+    e = batch * edges_per
+    b = {
+        "features": _sds((n, d_feat), f32),
+        "src": _sds((e,), i32),
+        "dst": _sds((e,), i32),
+        "edge_mask": _sds((e,), jnp.bool_),
+        "graph_ids": _sds((n,), i32),
+        "graph_labels": _sds((batch,), f32),
+    }
+    if with_positions:
+        b["positions"] = _sds((n, 3), f32)
+    return b
+
+
+def gnn_molecule_batch(
+    rng: np.random.Generator,
+    batch: int,
+    nodes_per: int,
+    edges_per: int,
+    d_feat: int,
+    with_positions: bool,
+):
+    n = batch * nodes_per
+    e = batch * edges_per
+    # Edges stay inside each molecule's node block.
+    graph_of_edge = np.repeat(np.arange(batch), edges_per)
+    src = (
+        rng.integers(0, nodes_per, e) + graph_of_edge * nodes_per
+    ).astype(np.int32)
+    dst = (
+        rng.integers(0, nodes_per, e) + graph_of_edge * nodes_per
+    ).astype(np.int32)
+    b = {
+        "features": jnp.asarray(rng.standard_normal((n, d_feat), dtype=np.float32)),
+        "src": jnp.asarray(src),
+        "dst": jnp.asarray(dst),
+        "edge_mask": jnp.asarray(src != dst),
+        "graph_ids": jnp.asarray(np.repeat(np.arange(batch), nodes_per).astype(np.int32)),
+        "graph_labels": jnp.asarray(rng.standard_normal(batch).astype(np.float32)),
+    }
+    if with_positions:
+        b["positions"] = jnp.asarray(rng.standard_normal((n, 3), dtype=np.float32) * 2.0)
+    return b
+
+
+def sage_minibatch_spec(
+    n_nodes: int, d_feat: int, roots: int, fanout: Tuple[int, int]
+) -> Dict[str, Any]:
+    f1, f2 = fanout
+    return {
+        "feat_table": _sds((n_nodes, d_feat), f32),
+        "hop0": _sds((roots,), i32),
+        "hop1": _sds((roots, f1), i32),
+        "hop2": _sds((roots, f1, f2), i32),
+        "hop1_mask": _sds((roots, f1), f32),
+        "hop2_mask": _sds((roots, f1, f2), f32),
+        "labels": _sds((roots,), i32),
+    }
+
+
+def subgraph_minibatch_spec(
+    n_table: int, d_feat: int, roots: int, fanout: Tuple[int, int], with_positions: bool
+) -> Dict[str, Any]:
+    """Sampled-subgraph block for non-SAGE GNNs on minibatch_lg: the layered
+    neighborhood flattened into one padded edge list."""
+    f1, f2 = fanout
+    n = roots * (1 + f1 + f1 * f2)
+    e = roots * f1 + roots * f1 * f2
+    b = {
+        "features": _sds((n, d_feat), f32),
+        "src": _sds((e,), i32),
+        "dst": _sds((e,), i32),
+        "edge_mask": _sds((e,), jnp.bool_),
+        "labels": _sds((n,), i32),
+        "train_mask": _sds((n,), f32),  # 1.0 on the root nodes
+    }
+    if with_positions:
+        b["positions"] = _sds((n, 3), f32)
+    return b
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+
+def recsys_train_spec(batch: int, hist: int) -> Dict[str, Any]:
+    return {
+        "user_id": _sds((batch,), i32),
+        "hist": _sds((batch, hist), i32),
+        "hist_mask": _sds((batch, hist), f32),
+        "item_id": _sds((batch,), i32),
+        "logq": _sds((batch,), f32),
+    }
+
+
+def recsys_train_batch(rng, cfg, batch: int):
+    h = cfg.hist_len
+    # Zipf-ish item popularity for a realistic logQ correction.
+    ranks = rng.integers(1, cfg.n_items, size=(batch,))
+    q = 1.0 / (np.asarray(ranks, np.float64) ** 0.9)
+    return {
+        "user_id": jnp.asarray(rng.integers(0, cfg.n_users, batch, dtype=np.int32)),
+        "hist": jnp.asarray(rng.integers(0, cfg.n_items, (batch, h), dtype=np.int32)),
+        "hist_mask": jnp.asarray((rng.random((batch, h)) < 0.7).astype(np.float32)),
+        "item_id": jnp.asarray(rng.integers(0, cfg.n_items, batch, dtype=np.int32)),
+        "logq": jnp.asarray(np.log(q / q.sum()).astype(np.float32)),
+    }
+
+
+def recsys_retrieval_spec(n_candidates: int, hist: int) -> Dict[str, Any]:
+    return {
+        "user_id": _sds((1,), i32),
+        "hist": _sds((1, hist), i32),
+        "hist_mask": _sds((1, hist), f32),
+        "cand_ids": _sds((n_candidates,), i32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Densest-subgraph (the paper's workload)
+# ---------------------------------------------------------------------------
+
+
+def densest_spec(n_nodes: int, n_edges: int) -> Dict[str, Any]:
+    return {
+        "src": _sds((n_edges,), i32),
+        "dst": _sds((n_edges,), i32),
+        "weight": _sds((n_edges,), f32),
+        "mask": _sds((n_edges,), jnp.bool_),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Unified per-(arch, shape) entry points
+# ---------------------------------------------------------------------------
+
+_GEOMETRIC = {"mace", "egnn", "equiformer-v2"}
+
+
+def _gnn_needs_positions(arch_id: str) -> bool:
+    return arch_id in _GEOMETRIC
+
+
+def abstract_batch(spec: ArchSpec, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for one dry-run cell (model inputs only —
+    params/caches/opt state are built separately)."""
+    p = dict(shape.params)
+    if spec.family == "lm":
+        cfg = spec.config
+        if shape.kind == "train":
+            return lm_train_batch_spec(cfg.vocab, p["global_batch"], p["seq_len"])
+        if shape.kind == "prefill":
+            return lm_prefill_spec(p["global_batch"], p["seq_len"])
+        if shape.kind in ("decode", "decode_long"):
+            return {"tokens": _sds((p["global_batch"], 1), i32)}
+        raise ValueError(shape.kind)
+    if spec.family == "gnn":
+        pos = _gnn_needs_positions(spec.arch_id)
+        if shape.kind == "full_train":
+            return gnn_full_batch_spec(
+                p["n_nodes"], p["n_edges"], p["d_feat"], p["n_classes"], pos
+            )
+        if shape.kind == "sampled_train":
+            if spec.arch_id == "graphsage-reddit":
+                return sage_minibatch_spec(
+                    p["n_nodes"], p["d_feat"], p["batch_nodes"], tuple(p["fanout"])
+                )
+            return subgraph_minibatch_spec(
+                p["n_nodes"], p["d_feat"], p["batch_nodes"], tuple(p["fanout"]), pos
+            )
+        if shape.kind == "molecule_train":
+            return gnn_molecule_batch_spec(
+                p["batch"], p["n_nodes"], p["n_edges"], p["d_feat"], pos
+            )
+        raise ValueError(shape.kind)
+    if spec.family == "recsys":
+        cfg = spec.config
+        if shape.kind in ("train", "serve"):
+            return recsys_train_spec(p["batch"], cfg.hist_len)
+        if shape.kind == "retrieval":
+            return recsys_retrieval_spec(p["n_candidates"], cfg.hist_len)
+        raise ValueError(shape.kind)
+    if spec.family == "densest":
+        return densest_spec(p["n_nodes"], p["n_edges"])
+    raise ValueError(spec.family)
+
+
+def make_batch(
+    spec: ArchSpec, shape_kind: str, *, reduced_shape: Mapping[str, Any], seed: int = 0
+) -> Dict[str, Any]:
+    """Concrete batch for smoke tests: same layout, reduced sizes."""
+    rng = np.random.default_rng(seed)
+    p = dict(reduced_shape)
+    if spec.family == "lm":
+        cfg = spec.reduced_config
+        if shape_kind == "train":
+            return lm_train_batch(rng, cfg.vocab, p["global_batch"], p["seq_len"])
+        if shape_kind == "prefill":
+            t = rng.integers(0, cfg.vocab, (p["global_batch"], p["seq_len"]), dtype=np.int32)
+            return {"tokens": jnp.asarray(t)}
+        raise ValueError(shape_kind)
+    if spec.family == "gnn":
+        pos = _gnn_needs_positions(spec.arch_id)
+        if shape_kind == "full_train":
+            return gnn_full_batch(
+                rng, p["n_nodes"], p["n_edges"], p["d_feat"], p["n_classes"], pos
+            )
+        if shape_kind == "molecule_train":
+            return gnn_molecule_batch(
+                rng, p["batch"], p["n_nodes"], p["n_edges"], p["d_feat"], pos
+            )
+        raise ValueError(shape_kind)
+    if spec.family == "recsys":
+        return recsys_train_batch(rng, spec.reduced_config, p["batch"])
+    raise ValueError(spec.family)

@@ -1,0 +1,3 @@
+from repro.graph.edgelist import EdgeList, dedup_edges, from_numpy, to_csr
+
+__all__ = ["EdgeList", "dedup_edges", "from_numpy", "to_csr"]

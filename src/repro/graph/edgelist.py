@@ -1,0 +1,123 @@
+"""Edge-list graph container used throughout the system.
+
+The densest-subgraph algorithms (core/), the GNN message-passing substrate
+(models/gnn/) and the Pallas peel kernel (kernels/peel_degree/) all consume
+this one representation: flat ``src``/``dst``/``weight`` arrays with an
+explicit padding ``mask`` so the edge count can be padded to a multiple of the
+device count for sharding.  ``n_nodes`` is static metadata (needed as the
+``num_segments`` of every ``segment_sum``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeList:
+    """A (possibly weighted, possibly padded) edge list.
+
+    Attributes:
+      src: int32[E] source node ids (undirected graphs store each edge once).
+      dst: int32[E] destination node ids.
+      weight: float32[E] edge weights (1.0 for unweighted graphs).
+      mask: bool[E] True for real edges, False for padding.
+      n_nodes: static number of nodes.
+      directed: static flag; undirected edges are stored once and counted for
+        both endpoints' degrees.
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    weight: jax.Array
+    mask: jax.Array
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+    directed: bool = dataclasses.field(default=False, metadata=dict(static=True))
+
+    @property
+    def n_edges_padded(self) -> int:
+        return self.src.shape[0]
+
+    def num_real_edges(self) -> jax.Array:
+        return jnp.sum(self.mask.astype(jnp.int32))
+
+    def with_padding(self, multiple: int) -> "EdgeList":
+        """Pads the edge arrays so E is a multiple of ``multiple``."""
+        e = self.src.shape[0]
+        pad = (-e) % multiple
+        if pad == 0:
+            return self
+        z32 = jnp.zeros((pad,), jnp.int32)
+        zf = jnp.zeros((pad,), jnp.float32)
+        zb = jnp.zeros((pad,), bool)
+        return EdgeList(
+            src=jnp.concatenate([self.src, z32]),
+            dst=jnp.concatenate([self.dst, z32]),
+            weight=jnp.concatenate([self.weight, zf]),
+            mask=jnp.concatenate([self.mask, zb]),
+            n_nodes=self.n_nodes,
+            directed=self.directed,
+        )
+
+
+def from_numpy(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_nodes: int,
+    *,
+    weight: np.ndarray | None = None,
+    directed: bool = False,
+) -> EdgeList:
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    if weight is None:
+        weight = np.ones_like(src, np.float32)
+    mask = np.ones_like(src, bool)
+    return EdgeList(
+        src=jnp.asarray(src),
+        dst=jnp.asarray(dst),
+        weight=jnp.asarray(np.asarray(weight, np.float32)),
+        mask=jnp.asarray(mask),
+        n_nodes=int(n_nodes),
+        directed=directed,
+    )
+
+
+def dedup_edges(
+    src: np.ndarray, dst: np.ndarray, *, directed: bool
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Removes self loops and duplicate edges (numpy, host side)."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if not directed:
+        lo = np.minimum(src, dst)
+        hi = np.maximum(src, dst)
+        src, dst = lo, hi
+    key = src * (dst.max(initial=0) + 1) + dst
+    _, idx = np.unique(key, return_index=True)
+    return src[idx].astype(np.int32), dst[idx].astype(np.int32)
+
+
+def to_csr(edges: EdgeList) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side CSR (indptr, indices) over the symmetrized adjacency."""
+    src = np.asarray(edges.src)[np.asarray(edges.mask)]
+    dst = np.asarray(edges.dst)[np.asarray(edges.mask)]
+    if edges.directed:
+        s, d = src, dst
+    else:
+        s = np.concatenate([src, dst])
+        d = np.concatenate([dst, src])
+    order = np.argsort(s, kind="stable")
+    s, d = s[order], d[order]
+    indptr = np.zeros(edges.n_nodes + 1, np.int64)
+    np.add.at(indptr, s + 1, 1)
+    indptr = np.cumsum(indptr)
+    return indptr, d.astype(np.int32)

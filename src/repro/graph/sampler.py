@@ -1,0 +1,113 @@
+"""Layered (fanout) neighbor sampler — GraphSAGE's own minibatch scheme.
+
+A REAL sampler over a CSR adjacency, not a stub: uniform with replacement
+when deg > fanout would undersample, without replacement otherwise; isolated
+nodes self-loop (mask 0).  Deterministic per (seed, step) so the pipeline is
+resumable (data/pipeline.py contract), and the hop tensors have the exact
+static shapes the ``minibatch_lg`` dry-run cell lowers.
+
+Output layout matches models/gnn/graphsage.forward_sampled:
+  hop0 [R], hop1 [R, f1], hop2 [R, f1, f2] (+ masks), labels [R].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    indptr: np.ndarray  # int64[N+1]
+    indices: np.ndarray  # int32[nnz]
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.indptr) - 1
+
+    @staticmethod
+    def from_edges(src: np.ndarray, dst: np.ndarray, n_nodes: int) -> "CSRGraph":
+        # symmetrized
+        s = np.concatenate([src, dst]).astype(np.int64)
+        d = np.concatenate([dst, src]).astype(np.int64)
+        order = np.argsort(s, kind="stable")
+        s, d = s[order], d[order]
+        indptr = np.zeros(n_nodes + 1, np.int64)
+        np.add.at(indptr, s + 1, 1)
+        return CSRGraph(np.cumsum(indptr), d.astype(np.int32))
+
+
+def _sample_neighbors(
+    g: CSRGraph, nodes: np.ndarray, fanout: int, rng: np.random.Generator
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(neigh int32[len(nodes), fanout], mask float32[...]) per node."""
+    n = len(nodes)
+    out = np.zeros((n, fanout), np.int32)
+    mask = np.zeros((n, fanout), np.float32)
+    starts = g.indptr[nodes]
+    degs = g.indptr[nodes + 1] - starts
+    for i in range(n):
+        deg = int(degs[i])
+        if deg == 0:
+            out[i, :] = nodes[i]  # self-loop, masked out
+            continue
+        s = int(starts[i])
+        if deg <= fanout:
+            idx = rng.permutation(deg)
+            take = g.indices[s : s + deg][idx]
+            out[i, : len(take)] = take
+            mask[i, : len(take)] = 1.0
+        else:
+            sel = rng.integers(0, deg, fanout)
+            out[i] = g.indices[s + sel]
+            mask[i] = 1.0
+    return out, mask
+
+
+class LayeredSampler:
+    """Resumable minibatch sampler: (seed, step) -> hop block."""
+
+    def __init__(
+        self,
+        graph: CSRGraph,
+        labels: np.ndarray,
+        batch_nodes: int,
+        fanout: Tuple[int, int],
+        seed: int = 0,
+    ):
+        self.g = graph
+        self.labels = labels
+        self.batch_nodes = batch_nodes
+        self.fanout = fanout
+        self.seed = seed
+        self.step = 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed << 20) ^ self.step)
+        self.step += 1
+        f1, f2 = self.fanout
+        roots = rng.integers(0, self.g.n_nodes, self.batch_nodes).astype(np.int32)
+        hop1, m1 = _sample_neighbors(self.g, roots, f1, rng)
+        hop2, m2 = _sample_neighbors(self.g, hop1.reshape(-1), f2, rng)
+        return {
+            "hop0": roots,
+            "hop1": hop1,
+            "hop2": hop2.reshape(self.batch_nodes, f1, f2),
+            "hop1_mask": m1,
+            "hop2_mask": (
+                m2.reshape(self.batch_nodes, f1, f2) * m1[:, :, None]
+            ).astype(np.float32),
+            "labels": self.labels[roots].astype(np.int32),
+        }
+
+    def checkpoint_state(self):
+        return {"seed": self.seed, "step": self.step}
+
+    def restore(self, state):
+        self.seed = int(state["seed"])
+        self.step = int(state["step"])

@@ -1,0 +1,1 @@
+from repro.kernels.count_sketch.ops import count_sketch_update

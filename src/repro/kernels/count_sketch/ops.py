@@ -1,0 +1,44 @@
+"""jit'd wrapper for the Count-Sketch update kernel, interface-compatible
+with core/countsketch.py's SketchParams."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.countsketch import SketchParams
+from repro.kernels.count_sketch.kernel import count_sketch_update_pallas
+from repro.kernels.count_sketch.ref import count_sketch_update_ref
+
+
+def count_sketch_update(
+    endpoints: jax.Array,
+    w: jax.Array,
+    params: SketchParams,
+    *,
+    use_pallas: bool = True,
+    block_e: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """float32[t, b] counter tables from an endpoint stream."""
+    if not use_pallas:
+        return count_sketch_update_ref(endpoints, w, params)
+    e = endpoints.shape[0]
+    pad = (-e) % block_e
+    if pad:
+        endpoints = jnp.pad(endpoints, (0, pad))
+        w = jnp.pad(w, (0, pad))
+    return count_sketch_update_pallas(
+        endpoints, w,
+        params.a_h, params.c_h, params.a_g, params.c_g,
+        n_buckets=params.n_buckets, block_e=block_e, interpret=interpret,
+    )
+
+
+def sketch_edges(edges_src, edges_dst, w_alive, params, **kw):
+    """Both endpoints of every edge contribute (paper §5.1 update rule)."""
+    endpoints = jnp.concatenate([edges_src, edges_dst])
+    w = jnp.concatenate([w_alive, w_alive])
+    return count_sketch_update(endpoints, w, params, **kw)

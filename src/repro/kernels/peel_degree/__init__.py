@@ -1,0 +1,1 @@
+from repro.kernels.peel_degree.ops import tiled_degrees

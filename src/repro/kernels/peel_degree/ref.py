@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the tiled degree kernel: plain segment_sum over the
+same tiled layout (bit-exact target, modulo f32 summation order)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tiled_degrees_ref(
+    target_local: jax.Array,  # int32[n_tiles, max_epT], -1 padding
+    w: jax.Array,  # float32[n_tiles, max_epT]
+    *,
+    tile_size: int,
+) -> jax.Array:
+    """float32[n_tiles, tile_size] via per-tile segment_sum."""
+    n_tiles = target_local.shape[0]
+
+    def per_tile(tl, wt):
+        safe = jnp.where(tl >= 0, tl, tile_size)  # padding -> overflow bucket
+        return jax.ops.segment_sum(wt, safe, num_segments=tile_size + 1)[:-1]
+
+    return jax.vmap(per_tile)(target_local, w)
+
+
+def degrees_from_tiled(deg_tiles: jax.Array, n_nodes: int) -> jax.Array:
+    """[n_tiles, tile_size] -> [n_nodes] (drops tile padding)."""
+    return deg_tiles.reshape(-1)[:n_nodes]

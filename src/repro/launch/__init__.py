@@ -1,0 +1,7 @@
+"""Launch layer: production mesh, multi-pod dry-run, roofline analysis,
+training/serving drivers.
+
+``dryrun.py`` must be run as its own process (it force-creates 512 host
+devices before any jax import side effects); everything else here is
+device-count agnostic.
+"""

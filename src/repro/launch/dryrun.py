@@ -1,0 +1,167 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production mesh and record memory / cost / collective statistics.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count on first init, and the 512 placeholder host devices are what
+let ``jax.make_mesh`` build the (2, 16, 16) production mesh on one CPU.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--include-densest] [--out-dir experiments/dryrun]
+  python -m repro.launch.dryrun --arch ... --shape ... --overrides '{"remat": false}'
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    multi_pod: bool,
+    overrides=None,
+    out_dir: str = "experiments/dryrun",
+    variant: str = "baseline",
+):
+    import jax
+
+    from repro.launch import hlo_stats, roofline
+    from repro.launch.cells import SkipCell, build_cell, lower_cell
+
+    t0 = time.time()
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant, "overrides": overrides or {},
+    }
+    try:
+        cell = build_cell(arch, shape, multi_pod=multi_pod, overrides=overrides)
+    except SkipCell as e:
+        rec.update(status="skipped", skip_reason=str(e))
+        return rec
+    try:
+        lowered = lower_cell(cell)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    "alias_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            }
+        except Exception as e:  # CPU backend may not implement everything
+            mem_d = {"error": str(e)}
+        try:
+            cost = compiled.cost_analysis()
+            cost_d = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))} if cost else {}
+        except Exception as e:
+            cost_d = {"error": str(e)}
+
+        hlo = compiled.as_text()
+        stats = hlo_stats.analyze(hlo, cell.info["n_devices"])
+        peak_mem = None
+        if isinstance(mem_d.get("temp_size_in_bytes"), int):
+            peak_mem = mem_d.get("temp_size_in_bytes", 0) + mem_d.get(
+                "argument_size_in_bytes", 0
+            ) - mem_d.get("alias_size_in_bytes", 0) + mem_d.get("output_size_in_bytes", 0)
+        rl = roofline.from_stats(
+            arch, shape, rec["mesh"], cell.info["n_devices"], stats,
+            model_flops=float(cell.info.get("flops_model", 0)),
+            xla_cost=cost_d if "error" not in cost_d else None,
+            peak_memory=peak_mem,
+        )
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory_analysis=mem_d,
+            cost_analysis={k: v for k, v in cost_d.items() if k in ("flops", "bytes accessed", "utilization operand 0 {}")},
+            hlo_stats={
+                k: v for k, v in stats.items() if k != "by_collective"
+            },
+            by_collective=stats.get("by_collective", {}),
+            info=cell.info,
+            roofline=rl.to_dict(),
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    rec["wall_s"] = round(time.time() - t0, 1)
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape}__{rec['mesh']}"
+        if variant != "baseline":
+            tag += f"__{variant}"
+        path = os.path.join(out_dir, tag + ".json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        rec["path"] = path
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--include-densest", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--overrides", type=str, default=None)
+    ap.add_argument("--variant", type=str, default="baseline")
+    ap.add_argument("--out-dir", type=str, default="experiments/dryrun")
+    args = ap.parse_args()
+
+    overrides = json.loads(args.overrides) if args.overrides else None
+
+    from repro.configs.registry import assigned_cells
+
+    if args.all:
+        cells = assigned_cells(include_densest=args.include_densest)
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape or --all required")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(
+                arch, shape, mp, overrides=overrides, out_dir=args.out_dir,
+                variant=args.variant,
+            )
+            status = rec["status"]
+            line = f"[{status:>7}] {arch} x {shape} ({rec['mesh']}) {rec.get('wall_s', 0)}s"
+            if status == "ok":
+                rl = rec["roofline"]
+                line += (
+                    f"  bound={rl['bound']} c/m/x={rl['compute_s']*1e3:.1f}/"
+                    f"{rl['memory_s']*1e3:.1f}/{rl['collective_s']*1e3:.1f}ms "
+                    f"frac={rl['roofline_fraction']:.1%}"
+                )
+            elif status == "error":
+                line += f"  {rec['error'][:200]}"
+                failures += 1
+            print(line, flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration driver: compile one cell (with overrides), print the three
+roofline terms AND the top collectives/fusions by executed bytes — the
+evidence each hypothesis -> change -> measure cycle reads.
+
+  python -m repro.launch.hillclimb --arch qwen2-72b --shape train_4k \
+      [--overrides '{"rules": {"embed": null}}'] [--top 12]
+"""
+
+import argparse
+import json
+import re
+from collections import defaultdict
+
+
+def top_ops(hlo: str, n_devices: int, top: int = 12):
+    """(opcode, size) aggregated with while-loop trip multipliers."""
+    from repro.launch import hlo_stats
+
+    comps = hlo_stats.parse_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = hlo_stats._COMP_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+    # multiplier per computation via DFS from entry
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    while order:
+        comp = order.pop(0)
+        for ins in comps.get(comp, []):
+            if ins.opcode == "while":
+                m = hlo_stats._COND_BODY_RE.search(ins.line)
+                if not m:
+                    continue
+                trip = hlo_stats._trip_count(comps.get(m.group(1), []), comps) or 1
+                for sub in (m.group(1), m.group(2)):
+                    mult[sub] += mult[comp] * trip
+                    if sub not in seen:
+                        seen.add(sub)
+                        order.append(sub)
+            else:
+                m = hlo_stats._TO_APPLY_RE.search(ins.line) or hlo_stats._CALLS_RE.search(ins.line)
+                if m and ins.opcode in ("call", "fusion"):
+                    sub = m.group(1)
+                    mult[sub] += mult[comp]
+                    if sub not in seen:
+                        seen.add(sub)
+                        order.append(sub)
+    rows = []
+    for comp, instrs in comps.items():
+        k = mult.get(comp, 0.0)
+        if k <= 0:
+            continue
+        sizes = {i.name: i.result_bytes for i in instrs}
+        for ins in instrs:
+            if ins.opcode in hlo_stats._COLLECTIVES:
+                b = hlo_stats._collective_bytes(ins, sizes, n_devices) * k
+                meta = re.search(r'op_name="([^"]+)"', ins.line)
+                rows.append(
+                    (b, ins.opcode, f"x{k:.0f}", ins.result_bytes,
+                     (meta.group(1)[-90:] if meta else ins.name))
+                )
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--overrides", type=str, default=None)
+    ap.add_argument("--variant", default="probe")
+    ap.add_argument("--top", type=int, default=12)
+    ap.add_argument("--save", default=None, help="also persist json under this variant")
+    args = ap.parse_args()
+
+    overrides = json.loads(args.overrides) if args.overrides else None
+    from repro.launch import hlo_stats, roofline
+    from repro.launch.cells import build_cell, lower_cell
+
+    cell = build_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod, overrides=overrides
+    )
+    compiled = lower_cell(cell).compile()
+    hlo = compiled.as_text()
+    stats = hlo_stats.analyze(hlo, cell.info["n_devices"])
+    rl = roofline.from_stats(
+        args.arch, args.shape, cell.info["mesh"], cell.info["n_devices"], stats,
+        model_flops=float(cell.info.get("flops_model", 0)),
+    )
+    try:
+        mem = compiled.memory_analysis()
+        temp = mem.temp_size_in_bytes / 2**30
+        arg = mem.argument_size_in_bytes / 2**30
+    except Exception:
+        temp = arg = float("nan")
+    print(
+        f"terms_s compute={rl.compute_s:.3f} memory={rl.memory_s:.3f} "
+        f"collective={rl.collective_s:.3f} bound={rl.bound} "
+        f"6ND/HLO={rl.model_flops_ratio:.3f} frac={rl.roofline_fraction:.2%}"
+    )
+    print(f"mem/dev GiB: args={arg:.2f} temp={temp:.2f}")
+    print("by_collective GB/dev:", {k: round(v / 1e9, 1) for k, v in stats["by_collective"].items()})
+    print("top collectives (executed GB/dev):")
+    for b, op, k, rb, name in top_ops(hlo, cell.info["n_devices"], args.top):
+        print(f"  {b/1e9:9.2f} GB {op:20s} {k:>5} blk={rb/2**20:8.1f}MiB  {name}")
+    if args.save:
+        from repro.launch.dryrun import run_cell
+
+        run_cell(args.arch, args.shape, args.multi_pod, overrides=overrides,
+                 variant=args.save)
+
+
+if __name__ == "__main__":
+    main()

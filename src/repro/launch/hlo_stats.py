@@ -1,0 +1,421 @@
+"""Static analyzer for compiled (SPMD-partitioned) HLO text.
+
+Extracts the three roofline inputs per device:
+
+  * ``flops``            — 2*M*N*K over every dot (+ cheap elementwise est.),
+  * ``hbm_bytes``        — sum of operand+result bytes at fusion boundaries
+                           (the XLA fusion boundary IS the HBM round-trip),
+  * ``collective_bytes`` — ring-model bytes per device for all-reduce /
+                           all-gather / reduce-scatter / all-to-all /
+                           collective-permute,
+
+with call-graph rollup: ``while`` bodies are multiplied by their trip count
+(recovered from the loop condition's comparison constant — this is what
+``compiled.cost_analysis()`` gets wrong: it visits loop bodies once, so an
+80-layer scan under-reports FLOPs by 80x).
+
+The HLO text shapes are PER-DEVICE (post-partitioning), so all outputs are
+per-device quantities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.-]+),\s*body=%?([\w.-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w.-]+)")
+_DIMS_RE = {
+    "lhs_contracting": re.compile(r"lhs_contracting_dims=\{([\d,]*)\}"),
+    "lhs_batch": re.compile(r"lhs_batch_dims=\{([\d,]*)\}"),
+}
+
+# Opcodes that are pure plumbing — no FLOPs, no HBM traffic of their own.
+# 'copy' is included: nearly all copies in partitioned loop bodies are
+# carried-buffer pass-throughs that XLA's buffer assignment elides (counting
+# them inflated loop-body traffic by ~100x in measurement).
+_PLUMBING = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "custom-call", "copy",
+}
+_CONTROL = {"while", "conditional", "call"}
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+
+def _type_bytes_and_dims(type_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Total bytes + per-component (dtype, dims) of a (possibly tuple) type."""
+    comps = []
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(x) for x in dims_s.split(",") if x] if dims_s else []
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        comps.append((dt, dims))
+    return total, comps
+
+
+def _split_type_rest(rhs: str) -> Tuple[str, str, str]:
+    """rhs = '<type> <opcode>(<operands>), attrs' -> (type, opcode, rest)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):  # tuple type: match balanced parens
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = rhs[: i + 1]
+                    rest = rhs[i + 1 :].strip()
+                    break
+        else:
+            return rhs, "", ""
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return rhs, "", ""
+        type_str = rhs[:sp]
+        rest = rhs[sp + 1 :].strip()
+    op_m = re.match(r"([\w-]+)", rest)
+    opcode = op_m.group(1) if op_m else ""
+    return type_str, opcode, rest
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_dims: List[Tuple[str, List[int]]]
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_count: float = 0.0
+    by_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def scaled(self, k: float) -> "Totals":
+        return Totals(
+            self.flops * k, self.hbm_bytes * k, self.collective_bytes * k,
+            self.collective_count * k,
+            {n: v * k for n, v in self.by_collective.items()},
+            self.unknown_trip_loops,
+        )
+
+    def add(self, o: "Totals"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.collective_bytes += o.collective_bytes
+        self.collective_count += o.collective_count
+        for n, v in o.by_collective.items():
+            self.by_collective[n] = self.by_collective.get(n, 0.0) + v
+        self.unknown_trip_loops += o.unknown_trip_loops
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and "->" in line:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        type_str, opcode, rest = _split_type_rest(rhs)
+        rb, rdims = _type_bytes_and_dims(type_str)
+        # Operand names: inside the first (...) after the opcode.
+        paren = rest.find("(")
+        operands: List[str] = []
+        if paren >= 0:
+            depth, j = 0, paren
+            for j in range(paren, len(rest)):
+                if rest[j] == "(":
+                    depth += 1
+                elif rest[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            operands = _OPERAND_RE.findall(rest[paren : j + 1])
+        comps[cur].append(Instr(name, opcode, rb, rdims, operands, rest))
+    return comps
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).strip("{}").split(",") if x.strip()]
+        return max(1, len(ids))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    return n_devices
+
+
+def _collective_bytes(instr: Instr, sizes: Dict[str, int], n_devices: int) -> float:
+    g = _group_size(instr.line, n_devices)
+    if g <= 1:
+        return 0.0
+    op = instr.opcode.replace("-start", "")
+    in_bytes = sum(sizes.get(o, 0) for o in instr.operands)
+    out_bytes = instr.result_bytes
+    # XLA:CPU promotes bf16 reductions to f32 ("..._promoted" computations);
+    # on TPU the wire dtype stays bf16 — count the real (half) bytes.
+    if "_promoted" in instr.line:
+        in_bytes //= 2
+        out_bytes //= 2
+    if op == "all-reduce":
+        return 2.0 * in_bytes * (g - 1) / g
+    if op == "all-gather":
+        return out_bytes * (g - 1) / g
+    if op == "reduce-scatter":
+        return in_bytes * (g - 1) / g
+    if op == "all-to-all":
+        return in_bytes * (g - 1) / g
+    if op == "collective-permute":
+        return float(out_bytes)
+    return 0.0
+
+
+def _dot_flops(instr: Instr, comps_sizes: Dict[str, List[Tuple[str, List[int]]]]) -> float:
+    """2 x (result elements) x (contracted elements)."""
+    res_elems = 1
+    for _, dims in instr.result_dims:
+        for d in dims:
+            res_elems *= d
+    m = _DIMS_RE["lhs_contracting"].search(instr.line)
+    contract = 1
+    if m and instr.operands:
+        lhs_dims_list = comps_sizes.get(instr.operands[0])
+        idxs = [int(x) for x in m.group(1).split(",") if x]
+        if lhs_dims_list:
+            _, lhs_dims = lhs_dims_list[0]
+            for i in idxs:
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+    return 2.0 * res_elems * contract
+
+
+def _trip_count(
+    cond_instrs: List[Instr], comps: Optional[Dict[str, List[Instr]]] = None
+) -> Optional[int]:
+    """Scan-style loops compare the induction var against a constant.  Data-
+    dependent loops (the peel's 'alive nonempty AND t < max') keep the
+    constant inside a fused compare — search called fusions too and treat the
+    bound as the (upper-bound) trip count."""
+    instrs = list(cond_instrs)
+    if comps is not None:
+        for ins in cond_instrs:
+            if ins.opcode in ("fusion", "call"):
+                m = _TO_APPLY_RE.search(ins.line) or _CALLS_RE.search(ins.line)
+                if m and m.group(1) in comps:
+                    instrs.extend(comps[m.group(1)])
+    consts: Dict[str, int] = {}
+    for ins in instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.line)
+            if m:
+                consts[ins.name] = int(m.group(1))
+    for ins in instrs:
+        if ins.opcode == "compare" and ("direction=LT" in ins.line or "direction=GT" in ins.line):
+            for o in ins.operands:
+                if o in consts and consts[o] > 0:
+                    return consts[o]
+    # Fallback: any positive constant in the condition.
+    pos = [v for v in consts.values() if v > 0]
+    return max(pos) if pos else None
+
+
+def analyze(
+    hlo: str,
+    n_devices: int,
+    default_trip: int = 1,
+    trip_override: Optional[int] = None,
+) -> Dict[str, float]:
+    """Full-program per-device totals (entry computation rollup)."""
+    comps = parse_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:  # heuristics: biggest computation
+        entry = max(comps, key=lambda c: len(comps[c]))
+
+    memo: Dict[str, Totals] = {}
+
+    def total_of(comp: str, stack=()) -> Totals:
+        if comp in memo:
+            return memo[comp]
+        if comp in stack or comp not in comps:
+            return Totals()
+        t = Totals()
+        instrs = comps[comp]
+        sizes = {i.name: i.result_bytes for i in instrs}
+        dims = {i.name: i.result_dims for i in instrs}
+        for ins in instrs:
+            op = ins.opcode
+            if op in _PLUMBING:
+                continue
+            if op == "while":
+                m = _COND_BODY_RE.search(ins.line)
+                if m:
+                    cond, body = m.group(1), m.group(2)
+                    trip = trip_override or _trip_count(comps.get(cond, []), comps)
+                    sub = total_of(body, stack + (comp,))
+                    sub_c = total_of(cond, stack + (comp,))
+                    if trip is None:
+                        trip = default_trip
+                        t.unknown_trip_loops += 1
+                    t.add(sub.scaled(trip))
+                    t.add(sub_c.scaled(trip))
+                continue
+            if op == "conditional":
+                m = _BRANCHES_RE.search(ins.line)
+                if m:
+                    branches = _OPERAND_RE.findall(m.group(1)) or [
+                        x.strip().lstrip("%") for x in m.group(1).split(",")
+                    ]
+                    subs = [total_of(b, stack + (comp,)) for b in branches]
+                    if subs:
+                        best = max(subs, key=lambda s: s.flops + s.hbm_bytes)
+                        t.add(best)
+                continue
+            if op == "call":
+                m = _TO_APPLY_RE.search(ins.line)
+                if m:
+                    t.add(total_of(m.group(1), stack + (comp,)))
+                continue
+            if op in _COLLECTIVES:
+                b = _collective_bytes(ins, sizes, n_devices)
+                t.collective_bytes += b
+                t.collective_count += 1
+                key = op.replace("-start", "")
+                t.by_collective[key] = t.by_collective.get(key, 0.0) + b
+                # Collectives also touch HBM on both ends.
+                t.hbm_bytes += ins.result_bytes + sum(
+                    sizes.get(o, 0) for o in ins.operands
+                )
+                continue
+            if op.endswith("-done") or op.endswith("-update"):
+                continue
+            if op in ("gather", "dynamic-slice"):
+                # Sparse read: traffic = result + indices, NOT the full table.
+                idx_bytes = sum(sizes.get(o, 0) for o in ins.operands[1:])
+                t.hbm_bytes += 2 * ins.result_bytes + idx_bytes
+                continue
+            if op in ("scatter", "dynamic-update-slice"):
+                # In-place sparse write: updates read+write + indices.
+                upd_bytes = sum(sizes.get(o, 0) for o in ins.operands[1:])
+                t.hbm_bytes += 2 * upd_bytes
+                t.flops += upd_bytes / 4.0  # scatter-add
+                continue
+            # Leaf compute op: traffic = operands + result.
+            boundary = ins.result_bytes + sum(sizes.get(o, 0) for o in ins.operands)
+            if op == "dot":
+                t.flops += _dot_flops(ins, dims)
+                t.hbm_bytes += boundary
+            elif op == "fusion":
+                m = _TO_APPLY_RE.search(ins.line) or _CALLS_RE.search(ins.line)
+                sub = None
+                if m:
+                    sub = total_of(m.group(1), stack + (comp,))
+                    t.flops += sub.flops  # dots inside fusions
+                    t.collective_bytes += sub.collective_bytes
+                    for n_, v in sub.by_collective.items():
+                        t.by_collective[n_] = t.by_collective.get(n_, 0.0) + v
+                # Fusion boundary = HBM traffic, EXCEPT operands that are only
+                # gathered/scattered inside (embedding tables): those cost the
+                # gathered bytes, not the table.
+                called = comps.get(m.group(1)) if m else None
+                if called is not None:
+                    boundary = ins.result_bytes
+                    called_sizes = {ci.name: ci.result_bytes for ci in called}
+                    params = {}
+                    for ci in called:
+                        if ci.opcode == "parameter":
+                            pm = re.search(r"parameter\((\d+)\)", ci.line)
+                            if pm:
+                                params[ci.name] = int(pm.group(1))
+                    sparse_param_idx = set()
+                    sparse_bytes = 0.0
+                    for ci in called:
+                        if ci.opcode in ("gather", "dynamic-slice", "scatter",
+                                         "dynamic-update-slice") and ci.operands:
+                            o0 = ci.operands[0]
+                            if o0 in params:
+                                sparse_param_idx.add(params[o0])
+                                if ci.opcode in ("gather", "dynamic-slice"):
+                                    sparse_bytes += 2 * ci.result_bytes
+                                else:
+                                    upd = sum(
+                                        called_sizes.get(o, 0)
+                                        for o in ci.operands[1:]
+                                    )
+                                    sparse_bytes += 2 * (upd or ci.result_bytes)
+                    for oi, o in enumerate(ins.operands):
+                        if oi in sparse_param_idx:
+                            continue
+                        boundary += sizes.get(o, 0)
+                    boundary += sparse_bytes
+                t.hbm_bytes += boundary
+            elif op in ("reduce", "reduce-window", "select-and-scatter",
+                        "sort", "map"):
+                # elementwise-ish estimate: 1 flop per input element
+                t.flops += sum(sizes.get(o, 0) for o in ins.operands) / 4.0
+                t.hbm_bytes += boundary
+            else:
+                t.hbm_bytes += boundary
+        memo[comp] = t
+        return t
+
+    tot = total_of(entry)
+    return {
+        "flops": tot.flops,
+        "hbm_bytes": tot.hbm_bytes,
+        "collective_bytes": tot.collective_bytes,
+        "collective_count": tot.collective_count,
+        "by_collective": dict(tot.by_collective),
+        "unknown_trip_loops": tot.unknown_trip_loops,
+        "n_computations": len(comps),
+    }

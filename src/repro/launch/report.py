@@ -1,0 +1,178 @@
+"""Assembles EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+``python -m repro.launch.report`` prints the §Dry-run and §Roofline markdown
+tables (single-pod roofline, multi-pod compile proof) and a sorted summary
+used to pick the hillclimb cells.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(out_dir: str = "experiments/dryrun", variant: str | None = "baseline") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if variant is not None and r.get("variant", "baseline") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    head = (
+        "| arch | shape | compute_s | memory_s | collective_s | bound | "
+        "HLO GFLOP/dev | coll GB/dev | mem GiB/dev | 6ND/HLO | roofline frac |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|"
+    )
+    lines = [head]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — | — | — | — |"
+            )
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        peak = None
+        if isinstance(mem.get("temp_size_in_bytes"), int):
+            peak = (
+                mem.get("temp_size_in_bytes", 0)
+                + mem.get("argument_size_in_bytes", 0)
+            )
+        lines.append(
+            "| {a} | {s} | {c:.3f} | {m:.3f} | {x:.3f} | {b} | {gf:.0f} | {cb:.2f} | {pk} | {ra:.2f} | {fr:.1%} |".format(
+                a=r["arch"], s=r["shape"],
+                c=rl["compute_s"], m=rl["memory_s"], x=rl["collective_s"],
+                b=rl["bound"], gf=rl["flops_per_dev"] / 1e9,
+                cb=rl["coll_bytes_per_dev"] / 1e9,
+                pk=fmt_bytes(peak), ra=rl["model_flops_ratio"],
+                fr=rl["roofline_fraction"],
+            )
+        )
+    return "\n".join(lines)
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    head = (
+        "| arch | shape | mesh | status | compile_s | args GiB/dev | temp GiB/dev | "
+        "collectives (count) |\n|---|---|---|---|---|---|---|---|"
+    )
+    lines = [head]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped ({r['skip_reason'][:40]}…) | — | — | — | — |"
+            )
+            continue
+        mem = r.get("memory_analysis", {})
+        hs = r.get("hlo_stats", {})
+        lines.append(
+            "| {a} | {s} | {m} | {st} | {cs} | {ag} | {tp} | {cc:.0f} |".format(
+                a=r["arch"], s=r["shape"], m=r["mesh"], st=r["status"],
+                cs=r.get("compile_s", "-"),
+                ag=fmt_bytes(mem.get("argument_size_in_bytes")),
+                tp=fmt_bytes(mem.get("temp_size_in_bytes")),
+                cc=hs.get("collective_count", 0),
+            )
+        )
+    return "\n".join(lines)
+
+
+def pick_hillclimb(recs: List[Dict]) -> List[Dict]:
+    ok = [r for r in recs if r["status"] == "ok" and r["mesh"] == "16x16"]
+    by_frac = sorted(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    by_coll = sorted(
+        ok,
+        key=lambda r: -(
+            r["roofline"]["collective_s"]
+            / max(r["roofline"]["step_time_s"], 1e-12)
+        ),
+    )
+    return {
+        "worst_fraction": [
+            (r["arch"], r["shape"], f"{r['roofline']['roofline_fraction']:.2%}")
+            for r in by_frac[:8]
+        ],
+        "most_collective_bound": [
+            (r["arch"], r["shape"],
+             f"coll/total={r['roofline']['collective_s']/max(r['roofline']['step_time_s'],1e-12):.2f}",
+             f"frac={r['roofline']['roofline_fraction']:.2%}")
+            for r in by_coll[:8]
+        ],
+    }
+
+
+def generate() -> str:
+    recs = load()
+    variants = load(variant=None)
+    named = [r for r in variants if r.get("variant", "baseline") != "baseline"]
+    parts = [
+        "### Dry-run: all cells x both meshes\n",
+        dryrun_table(recs),
+        "\n### Roofline terms (single-pod 16x16, current defaults)\n",
+        roofline_table(recs, "16x16"),
+    ]
+    if named:
+        parts.append("\n### Saved perf variants\n")
+        parts.append(roofline_table(named, "16x16").replace(
+            "| arch |", "| arch(variant) |"
+        ))
+        # annotate variant names
+        lines = parts[-1].splitlines()
+        out = lines[:2]
+        vi = 0
+        for r in named:
+            if r["mesh"] != "16x16":
+                continue
+            row = lines[2 + vi]
+            out.append(row.replace(
+                f"| {r['arch']} |", f"| {r['arch']} ({r['variant']}) |", 1
+            ))
+            vi += 1
+        parts[-1] = "\n".join(out)
+    return "\n".join(parts)
+
+
+def inject(path: str = "EXPERIMENTS.md"):
+    begin, end = "<!-- GENERATED:BEGIN -->", "<!-- GENERATED:END -->"
+    with open(path) as f:
+        doc = f.read()
+    pre = doc.split(begin)[0]
+    post = doc.split(end)[1]
+    with open(path, "w") as f:
+        f.write(pre + begin + "\n" + generate() + "\n" + end + post)
+    print(f"injected tables into {path}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--inject" in sys.argv:
+        inject()
+    else:
+        recs = load()
+        print("## Dry-run (both meshes)\n")
+        print(dryrun_table(recs))
+        print("\n## Roofline (single-pod 16x16)\n")
+        print(roofline_table(recs, "16x16"))
+        print("\n## Hillclimb candidates\n")
+        print(json.dumps(pick_hillclimb(recs), indent=1))

@@ -1,0 +1,131 @@
+"""Roofline terms for TPU v5e from a compiled dry-run artifact.
+
+    compute_s    = HLO_FLOPs    / (chips x 197e12 FLOP/s bf16)
+    memory_s     = HLO_bytes    / (chips x 819e9  B/s HBM)
+    collective_s = coll_bytes   / (chips x 50e9   B/s per ICI link)
+
+HLO quantities come from ``hlo_stats.analyze`` on the SPMD-partitioned
+module (per-device shapes), so chips cancels: term = per_device_qty / rate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12  # per chip, TPU v5e
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link (effective, one direction)
+HBM_PER_CHIP = 16 * 1024**3  # v5e: 16 GiB
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # per-device quantities from the partitioned HLO
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    # analytic
+    model_flops_total: float
+    # xla's own numbers, for cross-checking
+    xla_flops: Optional[float] = None
+    xla_bytes: Optional[float] = None
+    peak_memory_per_dev: Optional[float] = None
+    by_collective: Optional[Dict[str, float]] = None
+    notes: str = ""
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound is sum; perfect-overlap bound is max.
+        We report max (the roofline) and track the sum separately."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def model_flops_ratio(self) -> float:
+        """useful / compiled compute (catches remat & padding waste)."""
+        hw = self.flops_per_dev * self.n_devices
+        return self.model_flops_total / hw if hw else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak the step achieves at the bound:
+        (useful model FLOPs / chips / peak) / step_time."""
+        if self.step_time_s == 0:
+            return 0.0
+        useful_s = self.model_flops_total / self.n_devices / PEAK_FLOPS_BF16
+        return useful_s / self.step_time_s
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.update(
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            bound=self.bound,
+            step_time_s=self.step_time_s,
+            model_flops_ratio=self.model_flops_ratio,
+            roofline_fraction=self.roofline_fraction,
+        )
+        return d
+
+
+def from_stats(
+    arch: str,
+    shape: str,
+    mesh: str,
+    n_devices: int,
+    hlo_stats: Dict[str, float],
+    model_flops: float,
+    xla_cost: Optional[Dict[str, float]] = None,
+    peak_memory: Optional[float] = None,
+    notes: str = "",
+) -> Roofline:
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh,
+        n_devices=n_devices,
+        flops_per_dev=hlo_stats["flops"],
+        hbm_bytes_per_dev=hlo_stats["hbm_bytes"],
+        coll_bytes_per_dev=hlo_stats["collective_bytes"],
+        model_flops_total=model_flops,
+        xla_flops=(xla_cost or {}).get("flops"),
+        xla_bytes=(xla_cost or {}).get("bytes accessed"),
+        peak_memory_per_dev=peak_memory,
+        by_collective=hlo_stats.get("by_collective"),
+        notes=notes,
+    )
+
+
+def fmt_row(r: Roofline) -> str:
+    return (
+        f"| {r.arch} | {r.shape} | {r.mesh} | "
+        f"{r.compute_s*1e3:.2f} | {r.memory_s*1e3:.2f} | {r.collective_s*1e3:.2f} | "
+        f"{r.bound} | {r.model_flops_ratio:.2f} | {r.roofline_fraction:.2%} |"
+    )

@@ -1,0 +1,68 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <id> --requests N``.
+
+Runs the continuous-batching engine (serve/engine.py) on a REDUCED config
+with synthetic prompts, reporting per-phase latency stats — the CPU-scale
+shadow of the decode_32k production cell.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_arch
+    from repro.serve.engine import Request, ServeEngine
+    from repro.train.step import init_model_params
+
+    spec = get_arch(args.arch)
+    assert spec.family == "lm", "serving driver is for the LM family"
+    cfg = dataclasses.replace(spec.reduced_config, remat=False)
+    params = init_model_params(spec, jax.random.PRNGKey(args.seed), cfg=cfg)
+    rng = np.random.default_rng(args.seed)
+
+    eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=args.max_len)
+    t0 = time.time()
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 17))
+        eng.submit(
+            Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab, plen, dtype=np.int32),
+                max_new=args.max_new,
+            )
+        )
+    done = eng.run_to_completion()
+    wall = time.time() - t0
+    toks = sum(len(r.tokens) for r in done)
+    print(
+        json.dumps(
+            {
+                "arch": args.arch,
+                "requests": len(done),
+                "generated_tokens": toks,
+                "wall_s": round(wall, 2),
+                "tok_per_s": round(toks / wall, 1),
+            }
+        )
+    )
+    return done
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,408 @@
+"""Attention ops for the LM family: GQA, causal / sliding-window masks, KV
+cache for decode.  ``impl='xla'`` is the dense jnp path (used by the dry-run:
+the HLO represents the real computation); ``impl='pallas'`` dispatches to the
+fused Pallas kernel (TPU target, validated in interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard
+
+NEG_INF = -2.0e38
+
+
+def _causal_window_mask(
+    q_pos: jax.Array, kv_pos: jax.Array, window: Optional[int]
+) -> jax.Array:
+    """bool[Q, K] allowed-attention mask: kv_pos <= q_pos (& within window)."""
+    ok = kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= kv_pos[None, :] > q_pos[:, None] - window
+    return ok
+
+
+def gqa_attention(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Sk, Hkv, D]
+    v: jax.Array,  # [B, Sk, Hkv, D]
+    *,
+    q_positions: jax.Array,  # int32[Sq] absolute positions of queries
+    kv_positions: jax.Array,  # int32[Sk]
+    kv_valid: Optional[jax.Array] = None,  # bool[B, Sk] cache-slot validity
+    window: Optional[int] = None,
+    impl: str = "xla",
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Grouped-query attention with causal (+ optional sliding-window) mask.
+
+    impl:
+      'xla'         dense S^2 scores (short sequences / decode)
+      'xla_chunked' flash-style online-softmax double scan (O(chunk^2) memory)
+      'pallas'      fused Pallas TPU kernel (interpret-mode on CPU)
+      'auto'        chunked when Sq*Sk is large, dense otherwise
+    """
+    if impl == "auto":
+        impl = "xla_chunked" if q.shape[1] * k.shape[1] > 4096 * 2048 else "xla"
+    if impl == "pallas":
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        return flash_attention(
+            q, k, v,
+            q_positions=q_positions, kv_positions=kv_positions,
+            kv_valid=kv_valid, window=window,
+        )
+    if impl == "xla_chunked":
+        # Tensor-parallel layout: expand KV to the full query-head count and
+        # shard attention on heads.  GQA head counts (8-40) rarely divide the
+        # 16-way model axis; uneven head sharding costs <= 1.33x padding,
+        # versus 16x if attention compute were replicated (measured:
+        # model_flops_ratio 0.12 -> ~0.4; EXPERIMENTS.md Perf iteration 0).
+        # KV expansion costs g x KV bandwidth, negligible next to scores.
+        b, sq, hq, d = q.shape
+        hkv = k.shape[2]
+        if hkv != hq:
+            g = hq // hkv
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        q = shard(q, "batch", None, "heads4", None)
+        k = shard(k, "batch", None, "heads4", None)
+        v = shard(v, "batch", None, "heads4", None)
+        out = _chunked_gqa(
+            q, k, v,
+            q_positions=q_positions, kv_positions=kv_positions,
+            kv_valid=kv_valid, window=window,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+        return shard(out, "batch", None, "heads4", None)
+
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    qg = q.reshape(b, sq, hkv, g, d)
+    # [B, Hkv, G, Sq, Sk]
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    mask = _causal_window_mask(q_positions, kv_positions, window)  # [Sq, Sk]
+    if kv_valid is not None:
+        mask = mask[None] & kv_valid[:, None, :]  # [B, Sq, Sk]
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    else:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq, d)
+
+
+def _chunked_gqa(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Sk, Hkv, D]
+    v: jax.Array,  # [B, Sk, Hkv, D]
+    *,
+    q_positions: jax.Array,  # int32[Sq]
+    kv_positions: jax.Array,  # int32[Sk]
+    kv_valid: Optional[jax.Array],  # bool[B, Sk] or None
+    window: Optional[int],
+    q_chunk: int,
+    kv_chunk: int,
+) -> jax.Array:
+    """Flash attention (forward + custom backward) as a double chunk scan.
+
+    Peak live memory is O(q_chunk * kv_chunk) scores instead of O(Sq * Sk),
+    in BOTH directions: the backward is a custom VJP that recomputes the
+    probabilities per chunk pair from the saved (out, logsumexp) — letting
+    jax differentiate the forward scan instead would stack every chunk's
+    score matrix (O(Sq*Sk) residuals, ~200 GiB/layer at 4k seq).  This is
+    the same schedule the Pallas TPU kernel implements in VMEM; this XLA
+    version doubles as its reference oracle.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0
+
+    # Pad sequence dims to chunk multiples; padding is masked out.
+    pad_q = (-sq) % q_chunk
+    pad_k = (-sk) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad_q), constant_values=-(2**30))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad_k), constant_values=2**30)
+        if kv_valid is None:
+            base = jnp.arange(sk + pad_k) < sk
+            kv_valid = jnp.broadcast_to(base[None], (b, sk + pad_k))
+        else:
+            kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad_k)))
+    fn = _flash_fn(window, q_chunk, kv_chunk, bool(kv_valid is not None))
+    out = fn(q, k, v, q_positions, kv_positions, kv_valid)
+    return out[:, :sq]
+
+
+def _chunk_mask(qpos_blk, kpos_blk, valid_blk, window):
+    """bool[(b?),qc,kc] allowed mask for one (q, kv) chunk pair."""
+    ok = kpos_blk[None, :] <= qpos_blk[:, None]  # causal
+    if window is not None:
+        ok &= kpos_blk[None, :] > qpos_blk[:, None] - window
+    ok = ok[None, None, None]  # [1,1,1,qc,kc]
+    if valid_blk is not None:
+        ok = ok & valid_blk[:, None, None, None, :]
+    return ok
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_fn(window: Optional[int], q_chunk: int, kv_chunk: int, has_valid: bool):
+    """custom_vjp flash attention specialized to static (window, chunks)."""
+
+    def fwd_impl(q, k, v, q_positions, kv_positions, kv_valid):
+        b, sqp, hq, d = q.shape
+        _, skp, hkv, _ = k.shape
+        g = hq // hkv
+        nq, nk = sqp // q_chunk, skp // kv_chunk
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+        out_dtype = v.dtype
+
+        qc = q.reshape(b, nq, q_chunk, hkv, g, d)
+        qpos = q_positions.reshape(nq, q_chunk)
+        kc = k.reshape(b, nk, kv_chunk, hkv, d)
+        vc = v.reshape(b, nk, kv_chunk, hkv, d)
+        kpos = kv_positions.reshape(nk, kv_chunk)
+        valid = kv_valid.reshape(b, nk, kv_chunk) if has_valid else None
+
+        def one_q_chunk(args):
+            q_blk, qpos_blk = args  # [b, qc, hkv, g, d], [qc]
+
+            def kv_body(carry, inp):
+                m, l, acc = carry
+                if valid is None:
+                    k_blk, v_blk, kpos_blk = inp
+                    valid_blk = None
+                else:
+                    k_blk, v_blk, kpos_blk, valid_blk = inp
+                s = jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+                s = jnp.where(
+                    _chunk_mask(qpos_blk, kpos_blk, valid_blk, window), s, NEG_INF
+                )
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l = l * alpha + jnp.sum(p, axis=-1)
+                pv = jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                    preferred_element_type=jnp.float32,
+                )
+                acc = acc * alpha[..., None] + pv
+                return (m_new, l, acc), None
+
+            init = (
+                jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, g, q_chunk), jnp.float32),
+                jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32),
+            )
+            xs = (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), kpos)
+            if valid is not None:
+                xs = xs + (valid.transpose(1, 0, 2),)
+            (m, l, acc), _ = jax.lax.scan(kv_body, init, xs)
+            out = acc / jnp.maximum(l, 1e-30)[..., None]  # [b,hkv,g,qc,d]
+            lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), jnp.inf)
+            return out.transpose(0, 3, 1, 2, 4).astype(out_dtype), lse
+
+        outs, lses = jax.lax.map(
+            one_q_chunk, (qc.transpose(1, 0, 2, 3, 4, 5), qpos)
+        )  # [nq, b, qc, hkv, g, d], [nq, b, hkv, g, qc]
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sqp, hq, d)
+        return out, lses  # lse kept chunked: [nq, b, hkv, g, qc]
+
+    def f(q, k, v, q_positions, kv_positions, kv_valid):
+        return fwd_impl(q, k, v, q_positions, kv_positions, kv_valid)[0]
+
+    def f_fwd(q, k, v, q_positions, kv_positions, kv_valid):
+        out, lse = fwd_impl(q, k, v, q_positions, kv_positions, kv_valid)
+        return out, (q, k, v, q_positions, kv_positions, kv_valid, out, lse)
+
+    def f_bwd(res, dout):
+        q, k, v, q_positions, kv_positions, kv_valid, out, lse = res
+        b, sqp, hq, d = q.shape
+        _, skp, hkv, _ = k.shape
+        g = hq // hkv
+        nq, nk = sqp // q_chunk, skp // kv_chunk
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+        qc = q.reshape(b, nq, q_chunk, hkv, g, d).transpose(1, 0, 2, 3, 4, 5)
+        doc = dout.reshape(b, nq, q_chunk, hkv, g, d).transpose(1, 0, 2, 3, 4, 5)
+        outc = out.reshape(b, nq, q_chunk, hkv, g, d).transpose(1, 0, 2, 3, 4, 5)
+        qpos = q_positions.reshape(nq, q_chunk)
+        kc = k.reshape(b, nk, kv_chunk, hkv, d)
+        vc = v.reshape(b, nk, kv_chunk, hkv, d)
+        kpos = kv_positions.reshape(nk, kv_chunk)
+        valid = kv_valid.reshape(b, nk, kv_chunk) if has_valid else None
+        # delta_i = rowsum(dout_i * out_i): [nq, b, hkv, g, qc]
+        delta = jnp.sum(
+            doc.astype(jnp.float32) * outc.astype(jnp.float32), axis=-1
+        ).transpose(0, 1, 3, 4, 2)
+
+        def kv_outer(dq_acc, inp_j):
+            if valid is None:
+                k_blk, v_blk, kpos_blk = inp_j
+                valid_blk = None
+            else:
+                k_blk, v_blk, kpos_blk, valid_blk = inp_j
+
+            def q_inner(carry, inp_i):
+                dk_j, dv_j = carry
+                q_blk, do_blk, lse_blk, delta_blk, qpos_blk = inp_i
+                s = jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+                ok = _chunk_mask(qpos_blk, kpos_blk, valid_blk, window)
+                # p = exp(s - lse); fully-masked rows have lse=+inf -> p=0.
+                p = jnp.where(ok, jnp.exp(s - lse_blk[..., None]), 0.0)
+                dv_j = dv_j + jnp.einsum(
+                    "bhgqk,bqhgd->bkhd", p, do_blk.astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+                dp = jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", do_blk, v_blk,
+                    preferred_element_type=jnp.float32,
+                )
+                ds = p * (dp - delta_blk[..., None]) * scale
+                dq_blk = jnp.einsum(
+                    "bhgqk,bkhd->bqhgd", ds, k_blk.astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+                dk_j = dk_j + jnp.einsum(
+                    "bhgqk,bqhgd->bkhd", ds, q_blk.astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+                return (dk_j, dv_j), dq_blk
+
+            init = (
+                jnp.zeros((b, kv_chunk, hkv, d), jnp.float32),
+                jnp.zeros((b, kv_chunk, hkv, d), jnp.float32),
+            )
+            (dk_j, dv_j), dq_js = jax.lax.scan(
+                q_inner, init, (qc, doc, lse, delta, qpos)
+            )
+            return dq_acc + dq_js, (dk_j, dv_j)
+
+        xs = (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), kpos)
+        if valid is not None:
+            xs = xs + (valid.transpose(1, 0, 2),)
+        dq0 = jnp.zeros((nq, b, q_chunk, hkv, g, d), jnp.float32)
+        dq_c, (dk_c, dv_c) = jax.lax.scan(kv_outer, dq0, xs)
+        dq = dq_c.transpose(1, 0, 2, 3, 4, 5).reshape(b, sqp, hq, d)
+        dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(b, skp, hkv, d)
+        dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(b, skp, hkv, d)
+        return (
+            dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None, None,
+        )
+
+    flash = jax.custom_vjp(f)
+    flash.defvjp(f_fwd, f_bwd)
+    return flash
+
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    """Static description of a decode KV cache.
+
+    For sliding-window layers the cache is a rolling buffer of ``window``
+    slots (the Mistral/Mixtral rolling cache), which is what makes the
+    long_500k decode cell O(window) instead of O(seq).
+    """
+
+    batch: int
+    n_layers: int
+    max_len: int  # slots actually materialized (min(seq, window) for SWA)
+    n_kv_heads: int
+    d_head: int
+    dtype: jnp.dtype = jnp.bfloat16
+
+    def init(self):
+        shape = (self.n_layers, self.batch, self.max_len, self.n_kv_heads, self.d_head)
+        return {
+            "k": jnp.zeros(shape, self.dtype),
+            "v": jnp.zeros(shape, self.dtype),
+        }
+
+    def abstract(self):
+        shape = (self.n_layers, self.batch, self.max_len, self.n_kv_heads, self.d_head)
+        return {
+            "k": jax.ShapeDtypeStruct(shape, self.dtype),
+            "v": jax.ShapeDtypeStruct(shape, self.dtype),
+        }
+
+
+def cache_update(
+    cache_k: jax.Array,  # [B, M, Hkv, D] one layer's cache
+    cache_v: jax.Array,
+    k_new: jax.Array,  # [B, 1, Hkv, D]
+    v_new: jax.Array,
+    cur_len: jax.Array,  # int32[] tokens already in cache
+    rolling: bool,
+):
+    m = cache_k.shape[1]
+    slot = (cur_len % m) if rolling else jnp.minimum(cur_len, m - 1)
+    ck = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype), (0, slot, 0, 0))
+    return ck, cv
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, Hq, D] current-token queries (RoPE applied)
+    cache_k: jax.Array,  # [B, M, Hkv, D] already containing the new token
+    cache_v: jax.Array,
+    cur_len: jax.Array,  # int32[] position of the CURRENT token
+    *,
+    window: Optional[int] = None,
+    impl: str = "xla",
+) -> jax.Array:
+    """One-token attention against the cache.
+
+    Cache slot i holds absolute position i for dense caches, or position
+    ``i + floor((cur_len - i) / M) * M``-style wrap for rolling caches; we
+    reconstruct absolute positions from cur_len for masking.
+    """
+    b, m = cache_k.shape[0], cache_k.shape[1]
+    slots = jnp.arange(m, dtype=jnp.int32)
+    if window is None:
+        kv_pos = slots  # direct-mapped cache
+        valid = slots <= cur_len
+    else:
+        # Rolling buffer: slot s currently holds the largest position p <=
+        # cur_len with p % M == s.
+        cur_slot = cur_len % m
+        wrapped = slots > cur_slot
+        kv_pos = cur_len - cur_slot + slots - jnp.where(wrapped, m, 0)
+        valid = (kv_pos >= 0) & (kv_pos > cur_len - window) & (kv_pos <= cur_len)
+    q_pos = cur_len[None].astype(jnp.int32)
+    out = gqa_attention(
+        q,
+        cache_k,
+        cache_v,
+        q_positions=q_pos,
+        kv_positions=kv_pos,
+        kv_valid=jnp.broadcast_to(valid[None], (b, m)),
+        window=None,  # windowing already folded into `valid`
+        impl=impl,
+    )
+    return out

@@ -1,0 +1,157 @@
+"""Shared neural-net building blocks (hand-rolled: no flax/optax offline).
+
+Params are plain nested dicts of jax.Arrays; initializers take an explicit
+key.  Sharding is attached afterwards from path-pattern rules (see
+sharding/rules.py), so these modules stay mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def trunc_normal(key, shape, std, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(
+        dtype
+    )
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, std: Optional[float] = None, dtype=jnp.float32):
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": trunc_normal(key, (d_in, d_out), std, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, compute_dtype=None):
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def mlp_init(key, dims: Sequence[int], *, bias: bool = True, dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"layer{i}": dense_init(keys[i], dims[i], dims[i + 1], bias=bias, dtype=dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp(p, x, act=jax.nn.silu, compute_dtype=None, final_act: bool = False):
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"layer{i}"], x, compute_dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# ----------------------------- RoPE ----------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, d_head]; positions: [..., seq] int32."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)  # [d/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, d/2]
+    cos = jnp.cos(angles)[..., :, None, :]  # [..., seq, 1, d/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------- losses & metrics -----------------------------------
+
+
+def softmax_cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None,
+    z_loss: float = 0.0,
+):
+    """Token-level CE with optional z-loss; logits promoted to f32.
+
+    logits: [..., V]; labels int32 [...]; mask broadcastable to labels.
+    Returns (mean loss, dict of aux metrics).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(loss)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    mean = (loss * mask).sum() / denom
+    acc = ((jnp.argmax(logits, -1) == labels) * mask).sum() / denom
+    return mean, {"loss": mean, "accuracy": acc, "tokens": denom}
+
+
+def l2_loss(pred: jax.Array, target: jax.Array):
+    err = (pred.astype(jnp.float32) - target.astype(jnp.float32)) ** 2
+    loss = jnp.mean(err)
+    return loss, {"loss": loss, "rmse": jnp.sqrt(loss)}
+
+
+# --------------------- segment ops (GNN substrate) ---------------------------
+
+
+def segment_mean(data, segment_ids, num_segments):
+    s = jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+    cnt = jax.ops.segment_sum(
+        jnp.ones(data.shape[:1], data.dtype), segment_ids, num_segments=num_segments
+    )
+    return s / jnp.maximum(cnt, 1.0)[(...,) + (None,) * (data.ndim - 1)]
+
+
+def segment_softmax(scores, segment_ids, num_segments):
+    """Softmax over variable-size segments (edge softmax)."""
+    smax = jax.ops.segment_max(scores, segment_ids, num_segments=num_segments)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    ex = jnp.exp(scores - smax[segment_ids])
+    denom = jax.ops.segment_sum(ex, segment_ids, num_segments=num_segments)
+    return ex / jnp.maximum(denom[segment_ids], 1e-9)
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,1 @@
+from repro.models.gnn import egnn, equiformer_v2, graphsage, mace  # noqa: F401

@@ -1,0 +1,121 @@
+"""GraphSAGE (mean aggregator) — full-batch (edge-list segment_mean) and
+sampled-minibatch (layered fanout blocks from graph/sampler.py) paths.
+
+The full-batch path is the same gather -> segment-reduce substrate as the
+densest-subgraph core (see DESIGN.md §5: shared kernel regime).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    dense,
+    dense_init,
+    segment_mean,
+    softmax_cross_entropy,
+)
+from repro.sharding.rules import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    name: str = "graphsage-reddit"
+    n_layers: int = 2
+    d_in: int = 602
+    d_hidden: int = 128
+    n_classes: int = 41
+    fanouts: Tuple[int, ...] = (15, 10)
+    compute_dtype: jnp.dtype = jnp.bfloat16
+
+
+SAGE_PARAM_RULES = [
+    (r"layer\d+/(w_self|w_neigh)/w", ("fsdp", "tp")),
+    (r"head/w", ("fsdp", "tp")),
+    (r".*/b", (None,)),
+]
+
+
+def init_params(key, cfg: SAGEConfig):
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    params = {}
+    d = cfg.d_in
+    for i in range(cfg.n_layers):
+        params[f"layer{i}"] = {
+            "w_self": dense_init(ks[i], d, cfg.d_hidden, bias=True),
+            "w_neigh": dense_init(jax.random.fold_in(ks[i], 1), d, cfg.d_hidden),
+        }
+        d = cfg.d_hidden
+    out_d = cfg.n_classes if cfg.n_classes > 0 else 1  # 0 => regression head
+    params["head"] = dense_init(ks[-1], d, out_d, bias=True)
+    return params
+
+
+def _sage_layer(p, h_self, h_neigh_mean, cd, act=True):
+    y = dense(p["w_self"], h_self, cd) + dense(p["w_neigh"], h_neigh_mean, cd)
+    return jax.nn.relu(y) if act else y
+
+
+def forward_full(params, cfg: SAGEConfig, batch):
+    """Full-batch: batch = {features [N,F], src, dst, edge_mask}."""
+    cd = cfg.compute_dtype
+    h = batch["features"].astype(cd)
+    n = h.shape[0]
+    src, dst = batch["src"], batch["dst"]
+    w = batch["edge_mask"].astype(cd)
+    for i in range(cfg.n_layers):
+        h = shard(h, "nodes", None)
+        msgs = jnp.take(h, src, axis=0) * w[:, None]
+        agg = segment_mean(msgs, dst, n)
+        h = _sage_layer(params[f"layer{i}"], h, agg, cd)
+    h = shard(h, "nodes", None)
+    return dense(params["head"], h, cd).astype(jnp.float32)
+
+
+def forward_sampled(params, cfg: SAGEConfig, batch):
+    """Minibatch: layered fanout gathers (GraphSAGE's own sampling scheme).
+
+    batch = {feat_table [N,F], hop0 [R], hop1 [R,f1], hop2 [R,f1,f2],
+             hop1_mask, hop2_mask, labels [R]}
+    """
+    cd = cfg.compute_dtype
+    ft = batch["feat_table"]
+    f0 = jnp.take(ft, batch["hop0"], axis=0).astype(cd)  # [R, F]
+    f1 = jnp.take(ft, batch["hop1"], axis=0).astype(cd)  # [R, f1, F]
+    f2 = jnp.take(ft, batch["hop2"], axis=0).astype(cd)  # [R, f1, f2, F]
+    m1 = batch["hop1_mask"].astype(cd)[..., None]
+    m2 = batch["hop2_mask"].astype(cd)[..., None]
+
+    def masked_mean(x, m, axis):
+        return (x * m).sum(axis) / jnp.maximum(m.sum(axis), 1.0)
+
+    l0 = params["layer0"]
+    h1 = _sage_layer(l0, f1, masked_mean(f2, m2, axis=2), cd)  # [R, f1, d]
+    h0 = _sage_layer(l0, f0, masked_mean(f1, m1, axis=1), cd)  # [R, d]
+    l1 = params["layer1"]
+    hr = _sage_layer(l1, h0, masked_mean(h1, m1, axis=1), cd)  # [R, d]
+    return dense(params["head"], hr, cd).astype(jnp.float32)
+
+
+def loss_full(params, cfg: SAGEConfig, batch):
+    logits = forward_full(params, cfg, batch)
+    return softmax_cross_entropy(logits, batch["labels"], batch.get("train_mask"))
+
+
+def loss_sampled(params, cfg: SAGEConfig, batch):
+    logits = forward_sampled(params, cfg, batch)
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+def loss_pooled(params, cfg: SAGEConfig, batch):
+    """Batched-small-graphs (molecule shape): mean-pool per graph, regress."""
+    from repro.models.common import l2_loss
+
+    out = forward_full(params, cfg, batch)  # [N, 1]
+    n_graphs = batch["graph_labels"].shape[0]
+    pooled = segment_mean(out, batch["graph_ids"], n_graphs)[:, 0]
+    return l2_loss(pooled, batch["graph_labels"])

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch
+(GShard/Switch style, grouped to bound the dispatch tensors).
+
+Tokens are reshaped into groups; within each group an einsum-based
+dispatch/combine moves tokens to expert buffers of static capacity
+C = ceil(group_size * top_k * capacity_factor / n_experts).  The expert dim
+is sharded over the ``expert_batch`` logical axis when divisible (llama4:
+128 experts) and replicated otherwise (mixtral: 8 experts, whose d_ff is
+tensor-parallel over ``model`` instead); the token->expert movement then
+lowers to an all-to-all — the EP pattern.
+
+Aux losses: Switch load-balance loss + router z-loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, trunc_normal
+from repro.sharding.rules import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 2048
+    aux_loss_weight: float = 0.01
+    router_z_weight: float = 1e-3
+
+
+def moe_init(key, cfg: MoEConfig, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std_in = 1.0 / math.sqrt(d_model)
+    std_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "router": dense_init(k1, d_model, cfg.n_experts, dtype=dtype),
+        "w_gate": trunc_normal(k2, (cfg.n_experts, d_model, d_ff), std_in, dtype),
+        "w_up": trunc_normal(k3, (cfg.n_experts, d_model, d_ff), std_in, dtype),
+        "w_down": trunc_normal(k4, (cfg.n_experts, d_ff, d_model), std_out, dtype),
+    }
+
+
+def moe_apply(
+    p,
+    cfg: MoEConfig,
+    x: jax.Array,  # [B, S, D]
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    e = cfg.n_experts
+    tokens = x.reshape(b * s, d)
+    n_tok = tokens.shape[0]
+    gs = min(cfg.group_size, n_tok)
+    assert n_tok % gs == 0, f"tokens {n_tok} % group {gs}"
+    g = n_tok // gs
+    cap = int(math.ceil(gs * cfg.top_k * cfg.capacity_factor / e))
+    cap = max(cap, cfg.top_k)
+
+    xt = tokens.reshape(g, gs, d)
+    xt = shard(xt, "batch", None, "embed")
+
+    logits = jnp.einsum(
+        "gsd,de->gse", xt.astype(jnp.float32), p["router"]["w"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # [g, gs, e]
+
+    # Top-k gating with renormalization.
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)  # [g, gs, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Positions within each expert buffer, first-come-first-served per group.
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.float32)  # [g, gs, k, e]
+    # Order slots so that k=0 choices fill before k=1 across the group.
+    flat = onehot.transpose(0, 2, 1, 3).reshape(g, cfg.top_k * gs, e)
+    pos = jnp.cumsum(flat, axis=1) - flat  # [g, k*gs, e] rank of each claim
+    pos = pos.reshape(g, cfg.top_k, gs, e).transpose(0, 2, 1, 3)  # [g, gs, k, e]
+    in_cap = pos < cap
+    pos = jnp.minimum(pos, cap - 1).astype(jnp.int32)
+
+    # Dispatch/combine tensors [g, gs, e, cap]; built per top-k slice to keep
+    # the largest intermediate at [g, gs, e, cap] (not x top_k).
+    keep = onehot * in_cap.astype(jnp.float32)  # [g, gs, k, e]
+    dispatch = jnp.zeros((g, gs, e, cap), jnp.float32)
+    combine = jnp.zeros((g, gs, e, cap), jnp.float32)
+    for kk in range(cfg.top_k):
+        slot_oh = jax.nn.one_hot(pos[:, :, kk, :], cap, dtype=jnp.float32)
+        contrib = keep[:, :, kk, :, None] * slot_oh  # [g, gs, e, cap]
+        dispatch = dispatch + contrib
+        combine = combine + top_p[:, :, kk, None, None] * contrib
+    dispatch = shard(dispatch, "batch", None, "expert", None)
+    combine = shard(combine, "batch", None, "expert", None)
+
+    cd = compute_dtype
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch.astype(cd), xt.astype(cd))
+    expert_in = shard(expert_in, "expert", "batch", None, "embed")
+    h = jnp.einsum("egcd,edf->egcf", expert_in, p["w_gate"].astype(cd))
+    u = jnp.einsum("egcd,edf->egcf", expert_in, p["w_up"].astype(cd))
+    h = jax.nn.silu(h) * u
+    h = shard(h, "expert", "batch", None, "mlp")
+    out_e = jnp.einsum("egcf,efd->egcd", h, p["w_down"].astype(cd))
+    out_e = shard(out_e, "expert", "batch", None, "embed")
+    y = jnp.einsum("egcd,gsec->gsd", out_e, combine.astype(cd))
+    y = y.reshape(b, s, d).astype(x.dtype)
+
+    # Aux losses (Switch): fraction routed vs router prob mass per expert.
+    me = jnp.mean(onehot[:, :, 0, :], axis=(0, 1))  # top-1 assignment share
+    ce = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.aux_loss_weight * e * jnp.sum(me * ce)
+    zloss = cfg.router_z_weight * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1))
+    )
+    dropped = 1.0 - jnp.mean(keep.sum(2).max(-1) > 0)
+    return y, {"moe_aux": aux, "moe_z": zloss, "moe_drop_frac": dropped}

@@ -1,0 +1,399 @@
+"""Decoder-only transformer LM family: GQA + RoPE + (SWA | full) attention,
+SwiGLU/GELU dense MLP or MoE FFN, scan-over-layers with configurable remat.
+
+One implementation covers llama3.2-3b, starcoder2-7b, qwen2-72b, mixtral-8x7b
+and llama4-maverick-400b-a17b via `TransformerConfig`.  Forward paths:
+
+  forward()      full-sequence causal LM (training / scoring)
+  prefill()      fills a KV cache, returns last-position logits
+  decode_step()  one-token decode against the cache (dense or rolling/SWA)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    KVCacheSpec,
+    cache_update,
+    decode_attention,
+    gqa_attention,
+)
+from repro.models.common import (
+    dense,
+    dense_init,
+    layernorm,
+    layernorm_init,
+    mlp,
+    rmsnorm,
+    rmsnorm_init,
+    apply_rope,
+    softmax_cross_entropy,
+)
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.sharding.rules import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    mlp_type: str = "swiglu"  # swiglu | gelu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    qkv_bias: bool = False
+    rope_theta: float = 500_000.0
+    window: Optional[int] = None  # sliding-window attention (Mixtral)
+    moe: Optional[MoEConfig] = None
+    tie_embeddings: bool = False
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    attn_impl: str = "xla"  # xla | pallas
+    q_chunk: int = 512  # flash chunk sizes (xla_chunked / auto path)
+    kv_chunk: int = 1024
+    z_loss: float = 1e-4
+
+    @property
+    def d_q(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def d_kv(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        attn = d * self.d_q + 2 * d * self.d_kv + self.d_q * d
+        if self.qkv_bias:
+            attn += self.d_q + 2 * self.d_kv
+        if self.moe is not None:
+            ffn = self.moe.n_experts * 3 * d * f + d * self.moe.n_experts
+        else:
+            ffn = (3 if self.mlp_type == "swiglu" else 2) * d * f
+        per_layer = attn + ffn + 2 * d
+        head = 0 if self.tie_embeddings else d * v
+        return v * d + self.n_layers * per_layer + d + head
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE top-k) — for 6 N_active D."""
+        if self.moe is None:
+            return self.param_count()
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        attn = d * self.d_q + 2 * d * self.d_kv + self.d_q * d
+        ffn = self.moe.top_k * 3 * d * f + d * self.moe.n_experts
+        per_layer = attn + ffn + 2 * d
+        head = 0 if self.tie_embeddings else d * v
+        return v * d + self.n_layers * per_layer + d + head
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _norm_init(cfg, d):
+    return rmsnorm_init(d, cfg.param_dtype) if cfg.norm == "rmsnorm" else layernorm_init(d, cfg.param_dtype)
+
+
+def _norm(cfg, p, x):
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+def layer_init(key, cfg: TransformerConfig):
+    ks = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    p = {
+        "ln1": _norm_init(cfg, cfg.d_model),
+        "ln2": _norm_init(cfg, cfg.d_model),
+        "attn": {
+            "wq": dense_init(ks[0], cfg.d_model, cfg.d_q, bias=cfg.qkv_bias, dtype=dt),
+            "wk": dense_init(ks[1], cfg.d_model, cfg.d_kv, bias=cfg.qkv_bias, dtype=dt),
+            "wv": dense_init(ks[2], cfg.d_model, cfg.d_kv, bias=cfg.qkv_bias, dtype=dt),
+            "wo": dense_init(ks[3], cfg.d_q, cfg.d_model, dtype=dt),
+        },
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_init(ks[4], cfg.moe, cfg.d_model, cfg.d_ff, dtype=dt)
+    elif cfg.mlp_type == "swiglu":
+        p["mlp"] = {
+            "w_gate": dense_init(ks[4], cfg.d_model, cfg.d_ff, dtype=dt),
+            "w_up": dense_init(ks[5], cfg.d_model, cfg.d_ff, dtype=dt),
+            "w_down": dense_init(ks[6], cfg.d_ff, cfg.d_model, dtype=dt),
+        }
+    else:  # gelu
+        p["mlp"] = {
+            "w_up": dense_init(ks[4], cfg.d_model, cfg.d_ff, bias=True, dtype=dt),
+            "w_down": dense_init(ks[5], cfg.d_ff, cfg.d_model, bias=True, dtype=dt),
+        }
+    return p
+
+
+def init_params(key, cfg: TransformerConfig):
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+    params = {
+        "embed": {"w": 0.02 * jax.random.normal(k_embed, (cfg.vocab, cfg.d_model), cfg.param_dtype)},
+        "layers": layers,
+        "final_norm": _norm_init(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab, dtype=cfg.param_dtype)
+    return params
+
+
+def abstract_params(cfg: TransformerConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+# Path-pattern sharding rules (see sharding/rules.py).  FSDP shards the
+# leading non-TP dim of every matrix over the data axis; TP dims go to model.
+LM_PARAM_RULES = [
+    # vocab dim on 'model' (NOT fsdp): the logits gradient is vocab-sharded
+    # over 'model', so dW for the (tied) embedding contracts locally and
+    # reduce-scatters; (fsdp, tp) here forced a full logits-grad all-gather
+    # (250 GiB/device at 4k — EXPERIMENTS.md Perf iteration 0).
+    (r"embed/w", ("tp", "fsdp")),
+    (r"layers/attn/w[qkv]/w", (None, "fsdp", "tp")),
+    (r"layers/attn/w[qkv]/b", (None, "tp")),
+    (r"layers/attn/wo/w", (None, "tp", "fsdp")),
+    (r"layers/moe/router/w", (None, "fsdp", None)),
+    (r"layers/moe/w_(gate|up)", (None, "expert", "fsdp", "tp")),
+    (r"layers/moe/w_down", (None, "expert", "tp", "fsdp")),
+    (r"layers/mlp/w_(gate|up)/w", (None, "fsdp", "tp")),
+    (r"layers/mlp/w_down/w", (None, "tp", "fsdp")),
+    (r"layers/mlp/.*/b", (None, None)),
+    (r"lm_head/w", ("fsdp", "tp")),
+    (r"layers/ln[12]/(scale|bias)", (None, None)),
+    (r"final_norm/(scale|bias)", (None,)),
+]
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _attention_block(cfg, p, x, positions):
+    """Full-sequence causal attention (training / prefill); returns (out, k, v)."""
+    cd = cfg.compute_dtype
+    b, s, _ = x.shape
+    h = _norm(cfg, p["ln1"], x)
+    # Reshard ON the bf16 tensor: without this constraint GSPMD gathers the
+    # norm's f32 upcast over 'model' (2x wire bytes, measured 2 GiB vs 1 GiB
+    # per layer at qwen-72b scale) and re-does it per consumer.
+    h = shard(h, "batch", "seq", None)
+    q = dense(p["attn"]["wq"], h, cd)
+    k = dense(p["attn"]["wk"], h, cd)
+    v = dense(p["attn"]["wv"], h, cd)
+    q = shard(q, "batch", None, "heads")
+    k = shard(k, "batch", None, "kv_heads")
+    v = shard(v, "batch", None, "kv_heads")
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = gqa_attention(
+        q, k, v,
+        q_positions=positions, kv_positions=positions,
+        window=cfg.window, impl=cfg.attn_impl,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+    )
+    out = out.reshape(b, s, cfg.d_q)
+    out = shard(out, "batch", None, "heads")
+    out = dense(p["attn"]["wo"], out, cd)
+    # Constrain the partial-sum output to the RESIDUAL's sharding before the
+    # add: GSPMD then lowers psum+slice to a reduce-scatter (128 MiB) instead
+    # of a full-width all-reduce (2 GiB at qwen-72b scale, measured).
+    out = shard(out, "batch", "seq", "embed")
+    return x + out.astype(x.dtype), k, v
+
+
+def _ffn_block(cfg, p, x):
+    cd = cfg.compute_dtype
+    h = _norm(cfg, p["ln2"], x)
+    h = shard(h, "batch", "seq", None)  # see _attention_block
+    if cfg.moe is not None:
+        y, aux = moe_apply(p["moe"], cfg.moe, h, cd)
+    elif cfg.mlp_type == "swiglu":
+        g = dense(p["mlp"]["w_gate"], h, cd)
+        u = dense(p["mlp"]["w_up"], h, cd)
+        g = shard(g, "batch", None, "mlp")
+        u = shard(u, "batch", None, "mlp")
+        y = dense(p["mlp"]["w_down"], jax.nn.silu(g) * u, cd)
+        aux = {}
+    else:
+        u = dense(p["mlp"]["w_up"], h, cd)
+        u = shard(u, "batch", None, "mlp")
+        y = dense(p["mlp"]["w_down"], jax.nn.gelu(u), cd)
+        aux = {}
+    y = shard(y, "batch", "seq", "embed")  # psum+slice -> reduce-scatter
+    return x + y.astype(x.dtype), aux
+
+
+def _layer(cfg, p, x, positions):
+    x, _, _ = _attention_block(cfg, p, x, positions)
+    x, aux = _ffn_block(cfg, p, x)
+    x = shard(x, "batch", "seq", "embed")
+    moe_loss = aux.get("moe_aux", jnp.zeros((), jnp.float32)) + aux.get(
+        "moe_z", jnp.zeros((), jnp.float32)
+    )
+    return x, moe_loss
+
+
+def _logits(cfg, params, x):
+    cd = cfg.compute_dtype
+    h = _norm(cfg, params["final_norm"], x)
+    # The contraction dim (d_model) must be UNSHARDED going into the vocab
+    # projection: with the residual stream feature-sharded over 'model' and
+    # the head output vocab-sharded over 'model', GSPMD would otherwise
+    # resolve the backward dW einsum by all-gathering the full f32 logits
+    # gradient (~250 GiB at 4k x 256 batch) instead of the small h
+    # (measured; see EXPERIMENTS.md Perf iteration 0).
+    h = shard(h, "batch", None, None)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", h.astype(cd), params["embed"]["w"].astype(cd),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", h.astype(cd), params["lm_head"]["w"].astype(cd),
+            preferred_element_type=jnp.float32,
+        )
+    return shard(logits, "batch", None, "vocab")
+
+
+def forward(params, cfg: TransformerConfig, tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Causal LM forward: tokens int32[B, S] -> (logits f32[B, S, V], moe_loss)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = jnp.take(params["embed"]["w"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = shard(x, "batch", None, "embed")
+
+    def body(carry, layer_params):
+        x, acc = carry
+        x, moe_loss = _layer(cfg, layer_params, x, positions)
+        return (x, acc + moe_loss), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, moe_loss), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    return _logits(cfg, params, x), moe_loss
+
+
+def lm_loss(params, cfg: TransformerConfig, batch) -> Tuple[jax.Array, dict]:
+    logits, moe_loss = forward(params, cfg, batch["tokens"])
+    loss, metrics = softmax_cross_entropy(
+        logits, batch["labels"], batch.get("mask"), z_loss=cfg.z_loss
+    )
+    total = loss + moe_loss
+    metrics["moe_loss"] = moe_loss
+    metrics["total_loss"] = total
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: TransformerConfig, batch: int, seq_len: int) -> KVCacheSpec:
+    max_len = seq_len if cfg.window is None else cfg.window
+    return KVCacheSpec(
+        batch=batch, n_layers=cfg.n_layers, max_len=max_len,
+        n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+    )
+
+
+def prefill(params, cfg: TransformerConfig, tokens: jax.Array, extra_slots: int = 0):
+    """Processes the prompt; returns (last-position logits, cache, cur_len).
+
+    The cache stores the last ``min(S, window)`` positions (rolling for SWA).
+    ``extra_slots`` reserves empty slots after the prompt for subsequent
+    dense-cache decode steps (rolling caches need none).
+    """
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = jnp.take(params["embed"]["w"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = shard(x, "batch", None, "embed")
+    spec = cache_spec(cfg, b, s)
+    m = spec.max_len
+
+    def body(carry, layer_params):
+        x, acc = carry
+        x2, k, v = _attention_block(cfg, layer_params, x, positions)
+        x2, _ = _ffn_block(cfg, layer_params, x2)
+        x2 = shard(x2, "batch", None, "embed")
+        if cfg.window is None:
+            ck, cv = k, v
+        else:
+            # Rolling layout: slot = position % window for the last
+            # min(S, window) tokens; unfilled slots stay zero (masked out by
+            # decode_attention's position reconstruction).
+            keep = min(s, m)
+            slots = positions[-keep:] % m
+            zk = jnp.zeros((b, m, cfg.n_kv_heads, cfg.d_head), spec.dtype)
+            ck = zk.at[:, slots].set(k[:, -keep:].astype(spec.dtype))
+            cv = zk.at[:, slots].set(v[:, -keep:].astype(spec.dtype))
+        return (x2, acc), {"k": ck.astype(spec.dtype), "v": cv.astype(spec.dtype)}
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, _), cache = jax.lax.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), params["layers"]
+    )
+    if cfg.window is None and extra_slots > 0:
+        pad = [(0, 0), (0, 0), (0, extra_slots), (0, 0), (0, 0)]
+        cache = {k: jnp.pad(v, pad) for k, v in cache.items()}
+    logits = _logits(cfg, params, x[:, -1:, :])
+    cur_len = jnp.asarray(s, jnp.int32)
+    return logits[:, 0], cache, cur_len
+
+
+def decode_step(params, cfg: TransformerConfig, cache, tokens: jax.Array, cur_len: jax.Array):
+    """One decode step: tokens int32[B, 1] at position cur_len.
+
+    Returns (logits f32[B, V], new_cache, cur_len+1).
+    """
+    b = tokens.shape[0]
+    cd = cfg.compute_dtype
+    x = jnp.take(params["embed"]["w"], tokens, axis=0).astype(cd)
+    x = shard(x, "batch", None, "embed")
+    positions = cur_len[None].astype(jnp.int32)
+    rolling = cfg.window is not None
+
+    def body(x, scanned):
+        layer_params, ck, cv = scanned
+        h = _norm(cfg, layer_params["ln1"], x)
+        q = dense(layer_params["attn"]["wq"], h, cd).reshape(b, 1, cfg.n_heads, cfg.d_head)
+        k = dense(layer_params["attn"]["wk"], h, cd).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+        v = dense(layer_params["attn"]["wv"], h, cd).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        ck, cv = cache_update(ck, cv, k, v, cur_len, rolling)
+        ck = shard(ck, "batch", "kv_seq", None, None)
+        cv = shard(cv, "batch", "kv_seq", None, None)
+        out = decode_attention(
+            q, ck, cv, cur_len, window=cfg.window, impl=cfg.attn_impl
+        )
+        out = out.reshape(b, 1, cfg.d_q)
+        x = x + dense(layer_params["attn"]["wo"], out, cd).astype(x.dtype)
+        x, _ = _ffn_block(cfg, layer_params, x)
+        return x, {"k": ck, "v": cv}
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], new_cache, cur_len + 1

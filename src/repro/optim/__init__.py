@@ -1,0 +1,28 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    AdamWState,
+    abstract_state,
+    apply_updates,
+    global_norm,
+    init_state,
+)
+from repro.optim.compression import (
+    CompressionConfig,
+    compress_decompress_psum,
+    init_error_state,
+)
+from repro.optim.schedules import constant, warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "CompressionConfig",
+    "abstract_state",
+    "apply_updates",
+    "compress_decompress_psum",
+    "constant",
+    "global_norm",
+    "init_error_state",
+    "init_state",
+    "warmup_cosine",
+]

@@ -1,0 +1,84 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization
+trick from DESIGN.md §4):
+
+  * bf16 cast (2x) — loss-free in practice for all-reduce;
+  * int8 block quantization with ERROR FEEDBACK (residual carried to the next
+    step, 1-bit-Adam style) — 4x wire bytes.
+
+Used by the shard_map data-parallel trainer and the pipeline's pod-boundary
+gradient sync; unit-tested for the error-feedback contract (compression error
+does not accumulate over steps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"  # none | bf16 | int8_ef
+    block: int = 256
+
+
+def init_error_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_decompress_psum(
+    grads: Any,
+    err: Optional[Any],
+    cfg: CompressionConfig,
+    axis_name: Optional[str] = None,
+) -> Tuple[Any, Optional[Any], float]:
+    """Compresses grads, (optionally) psums over ``axis_name`` inside
+    shard_map, decompresses; returns (grads, new_err, wire_bytes_factor)."""
+
+    def maybe_psum(x):
+        return jax.lax.psum(x, axis_name) if axis_name is not None else x
+
+    if cfg.kind == "none":
+        return jax.tree.map(maybe_psum, grads), err, 1.0
+
+    if cfg.kind == "bf16":
+        out = jax.tree.map(
+            lambda g: maybe_psum(g.astype(jnp.bfloat16)).astype(jnp.float32), grads
+        )
+        return out, err, 0.5
+
+    if cfg.kind == "int8_ef":
+        assert err is not None
+
+        def one(g, e):
+            g = g.astype(jnp.float32) + e  # error feedback
+            flat = g.reshape(-1)
+            pad = (-flat.size) % cfg.block
+            flat_p = jnp.pad(flat, (0, pad)).reshape(-1, cfg.block)
+            scale = jnp.max(jnp.abs(flat_p), axis=1) / 127.0
+            # Shared per-block scale across shards (one tiny pmax collective)
+            # so the int8 payloads can be summed exactly in int32.
+            if axis_name is not None:
+                scale = jax.lax.pmax(scale, axis_name)
+            scale = jnp.maximum(scale, 1e-12)
+            q = jnp.clip(jnp.round(flat_p / scale[:, None]), -127, 127)
+            deq_local = q * scale[:, None]
+            new_e = (flat_p - deq_local).reshape(-1)[: flat.size].reshape(g.shape)
+            # Wire payload: int8 (summed in int32 on the reduction tree).
+            q_sum = maybe_psum(q.astype(jnp.int32)).astype(jnp.float32)
+            out = (q_sum * scale[:, None]).reshape(-1)[: flat.size].reshape(g.shape)
+            return out, new_e
+
+        flat, tdef = jax.tree.flatten(grads)
+        flat_e = tdef.flatten_up_to(err)
+        outs = [one(g, e) for g, e in zip(flat, flat_e)]
+        return (
+            tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]),
+            0.26,
+        )
+
+    raise ValueError(cfg.kind)

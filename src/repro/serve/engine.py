@@ -1,0 +1,157 @@
+"""Batched LM serving engine: continuous batching over a fixed-slot KV cache.
+
+Production structure (single-host scale model of the decode_32k cell):
+
+  * fixed ``n_slots`` decode slots, each holding one request's KV state
+    inside a shared [L, slots, max_len, Hkv, D] cache (the dry-run's
+    decode-cell layout, batch dim = slots);
+  * admission: new requests prefill into a free slot (prefill and decode are
+    separate jitted programs, as in disaggregated serving);
+  * every engine step decodes ONE token for ALL active slots (continuous
+    batching — finished requests retire immediately, their slot is reusable
+    on the next step, no head-of-line blocking);
+  * deterministic greedy sampling (argmax) for testability; the sampler is
+    a pluggable fn(logits) -> token.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import TransformerConfig, decode_step, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # int32[P]
+    max_new: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        params,
+        cfg: TransformerConfig,
+        n_slots: int = 4,
+        max_len: int = 256,
+        sampler: Optional[Callable] = None,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len if cfg.window is None else min(max_len, cfg.window)
+        self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
+        if cfg.window is not None:
+            # Rolling caches must match the prefill buffer layout exactly
+            # (slot s holds position p with p % window == s).
+            self.max_len = cfg.window
+        shape = (cfg.n_layers, n_slots, self.max_len, cfg.n_kv_heads, cfg.d_head)
+        self.cache = {
+            "k": jnp.zeros(shape, jnp.bfloat16),
+            "v": jnp.zeros(shape, jnp.bfloat16),
+        }
+        self.cur_len = np.zeros(n_slots, np.int64)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.queue: List[Request] = []
+        self._decode = jax.jit(self._decode_impl)
+
+    # --- public API ---
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def step(self) -> List[Request]:
+        """Admit + decode one token for all active slots; returns finished."""
+        self._admit()
+        finished = []
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if active:
+            self._decode_active(active)
+            for i in active:
+                r = self.slot_req[i]
+                tok = r.tokens[-1]
+                if (r.eos_id is not None and tok == r.eos_id) or len(
+                    r.tokens
+                ) >= r.max_new:
+                    r.done = True
+                    finished.append(r)
+                    self.slot_req[i] = None
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000) -> List[Request]:
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+        return out
+
+    # --- internals ---
+
+    def _admit(self):
+        for i in range(self.n_slots):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into(i, req)
+                self.slot_req[i] = req
+
+    def _prefill_into(self, slot: int, req: Request):
+        p = len(req.prompt)
+        if self.cfg.window is None and p + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {p} + max_new {req.max_new} "
+                f"exceeds cache {self.max_len}"
+            )
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, cache, cur_len = prefill(self.params, self.cfg, tokens)
+        keep = min(p, self.max_len)
+        # Copy the request's prefill cache into the shared slot.
+        for key in ("k", "v"):
+            blk = cache[key][:, 0]  # [L, P(or window), H, D]
+            self.cache[key] = jax.lax.dynamic_update_slice(
+                self.cache[key],
+                blk[:, None, :keep].astype(self.cache[key].dtype),
+                (0, slot, 0, 0, 0),
+            )
+        self.cur_len[slot] = p
+        first = int(jax.device_get(self.sampler(logits))[0])
+        req.tokens.append(first)
+
+    def _decode_impl(self, params, cache, tokens, cur_lens):
+        """Per-slot-position decode: vmap of a B=1 decode over the slot dim,
+        so every request attends at ITS OWN position (continuous batching
+        with heterogeneous lengths)."""
+
+        def one_slot(cache_k, cache_v, tok, cur):
+            # cache_k/v: [L, M, H, D]; tok: int32[1]; cur: int32[]
+            c = {"k": cache_k[:, None], "v": cache_v[:, None]}
+            logits, nc, _ = decode_step(params, self.cfg, c, tok[None], cur)
+            return logits[0], nc["k"][:, 0], nc["v"][:, 0]
+
+        logits, nk, nv = jax.vmap(
+            one_slot, in_axes=(1, 1, 0, 0), out_axes=(0, 1, 1)
+        )(cache["k"], cache["v"], tokens, cur_lens)
+        return logits, {"k": nk, "v": nv}
+
+    def _decode_active(self, active: List[int]):
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self.slot_req[i].tokens[-1]
+        cur = jnp.asarray(self.cur_len, jnp.int32)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), cur
+        )
+        nxt = jax.device_get(self.sampler(logits))
+        for i in active:
+            self.slot_req[i].tokens.append(int(nxt[i]))
+            self.cur_len[i] += 1

@@ -1,0 +1,197 @@
+"""Logical-axis sharding: model code names axes ("embed", "heads", ...) and a
+per-run rule table maps them to mesh axes.  Changing the mesh (single-pod
+16x16, multi-pod 2x16x16, a test 1x1) never touches model code — the
+elastic-scaling contract.
+
+Param shardings are derived from path-pattern rules (regex on the pytree
+path), activation shardings from ``shard(x, "batch", "seq", "embed")`` calls
+that consult an ambient context (no-ops when no mesh is active, so smoke
+tests on one device run the same code).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+# Default logical-axis -> mesh-axis tables.  "batch" spreads over pod+data;
+# tensor-parallel dims go to "model".
+SINGLE_POD_RULES: dict[str, MeshAxes] = {
+    "batch": ("data",),
+    "expert_batch": ("data",),
+    "model": ("model",),
+    "edges": ("data", "model"),
+}
+MULTI_POD_RULES: dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "expert_batch": ("data",),
+    "model": ("model",),
+    "edges": ("pod", "data", "model"),
+}
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """Maps logical axis names to mesh axes."""
+
+    table: Mapping[str, MeshAxes]
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.table.get(logical, None)
+
+    def pspec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        used: list[MeshAxes] = []
+        seen: set[str] = set()
+        for a in logical_axes:
+            m = self.mesh_axes(a)
+            # A mesh axis may appear at most once in a PartitionSpec.
+            if m is None:
+                used.append(None)
+                continue
+            ms = (m,) if isinstance(m, str) else tuple(m)
+            ms = tuple(x for x in ms if x not in seen)
+            seen.update(ms)
+            used.append(ms if ms else None)
+        while used and used[-1] is None:
+            used.pop()
+        return P(*used)
+
+
+def make_rules(
+    logical_to_mesh: Mapping[str, MeshAxes], base: Optional[Mapping[str, MeshAxes]] = None
+) -> AxisRules:
+    table = dict(base or {})
+    table.update(logical_to_mesh)
+    return AxisRules(table)
+
+
+# ---------------------------------------------------------------------------
+# Ambient sharding context (mesh + rules) for activation constraints.
+# ---------------------------------------------------------------------------
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[AxisRules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[AxisRules]):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrains activation sharding; identity when no context is active."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"shard(): got {len(logical_axes)} axes for rank-{x.ndim} array"
+        )
+    spec = _CTX.rules.pspec(logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _CTX.rules
+
+
+# ---------------------------------------------------------------------------
+# Param shardings from path-pattern rules.
+# ---------------------------------------------------------------------------
+
+ParamRule = Tuple[str, Tuple[Optional[str], ...]]  # (path regex, logical axes)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def logical_axes_for_params(params: Any, param_rules: Sequence[ParamRule]) -> Any:
+    """Pytree of logical-axis tuples matching ``params`` structure."""
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        for pattern, axes in param_rules:
+            if re.search(pattern, ps):
+                if len(axes) != leaf.ndim:
+                    raise ValueError(
+                        f"rule {pattern} gives {len(axes)} axes for rank-{leaf.ndim} "
+                        f"param at {ps} with shape {leaf.shape}"
+                    )
+                return tuple(axes)
+        return (None,) * leaf.ndim
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def pspecs_for_params(params: Any, param_rules: Sequence[ParamRule], rules: AxisRules):
+    axes_tree = logical_axes_for_params(params, param_rules)
+    return jax.tree.map(
+        lambda a: rules.pspec(a), axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def shardings_for_params(
+    params: Any, param_rules: Sequence[ParamRule], rules: AxisRules, mesh: Mesh
+):
+    specs = pspecs_for_params(params, param_rules, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def divisibility_check(shape_tree: Any, specs: Any, mesh: Mesh) -> list[str]:
+    """Returns a list of human-readable problems where a sharded dim is not
+    divisible by its mesh-axis product (caught before XLA does)."""
+    problems: list[str] = []
+
+    def check(path, leaf, spec):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axs = (ax,) if isinstance(ax, str) else ax
+            total = 1
+            for a in axs:
+                total *= mesh.shape[a]
+            if leaf.shape[dim] % total != 0:
+                problems.append(
+                    f"{_path_str(path)}: dim {dim} ({leaf.shape[dim]}) % {axs}={total}"
+                )
+
+    jax.tree_util.tree_map_with_path(
+        check, shape_tree, specs, is_leaf=lambda x: hasattr(x, "shape")
+    )
+    return problems

@@ -1,0 +1,151 @@
+"""Per-family step builders: loss functions, train_step (fwd+bwd+AdamW), and
+serve steps.  Used identically by smoke tests (reduced configs, 1 device),
+the real CPU training examples, and the multi-pod dry-run (full configs,
+ShapeDtypeStructs)."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.optim import AdamWConfig, AdamWState, apply_updates
+
+
+# ---------------------------------------------------------------------------
+# Loss dispatch
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(spec: ArchSpec, shape_kind: str, cfg=None) -> Callable:
+    """Returns loss(params, batch) -> (scalar, metrics) for an (arch, shape)."""
+    cfg = cfg if cfg is not None else spec.config
+    family, arch = spec.family, spec.arch_id
+    if family == "lm":
+        from repro.models.transformer import lm_loss
+
+        return partial(lm_loss, cfg=cfg)
+
+    if family == "gnn":
+        if arch == "graphsage-reddit":
+            from repro.models.gnn import graphsage as m
+
+            table = {
+                "full_train": m.loss_full,
+                "sampled_train": m.loss_sampled,
+                "molecule_train": m.loss_pooled,
+            }
+            return partial(table[shape_kind], cfg=cfg)
+        mods = {
+            "mace": "repro.models.gnn.mace",
+            "egnn": "repro.models.gnn.egnn",
+            "equiformer-v2": "repro.models.gnn.equiformer_v2",
+        }
+        import importlib
+
+        m = importlib.import_module(mods[arch])
+        if shape_kind == "molecule_train":
+            return partial(m.loss_energy, cfg=cfg)
+        return partial(m.loss_node_class, cfg=cfg)
+
+    if family == "recsys":
+        from repro.models import recsys as m
+
+        return partial(m.loss_in_batch_softmax, cfg=cfg)
+
+    raise ValueError(family)
+
+
+def init_model_params(spec: ArchSpec, key, cfg=None):
+    cfg = cfg if cfg is not None else spec.config
+    if spec.family == "lm":
+        from repro.models.transformer import init_params
+
+        return init_params(key, cfg)
+    if spec.family == "gnn":
+        import importlib
+
+        mod = {
+            "graphsage-reddit": "repro.models.gnn.graphsage",
+            "mace": "repro.models.gnn.mace",
+            "egnn": "repro.models.gnn.egnn",
+            "equiformer-v2": "repro.models.gnn.equiformer_v2",
+        }[spec.arch_id]
+        return importlib.import_module(mod).init_params(key, cfg)
+    if spec.family == "recsys":
+        from repro.models.recsys import init_params
+
+        return init_params(key, cfg)
+    raise ValueError(spec.family)
+
+
+def specialize_gnn_config(cfg, shape_params) -> Any:
+    """GNN configs carry d_in/n_classes that depend on the shape's dataset."""
+    reps = {}
+    if "d_feat" in shape_params:
+        reps["d_in"] = shape_params["d_feat"]
+    if hasattr(cfg, "n_classes"):
+        reps["n_classes"] = shape_params.get("n_classes", 0)
+    return dataclasses.replace(cfg, **reps)
+
+
+# ---------------------------------------------------------------------------
+# Train / serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig):
+    """(params, opt_state, batch) -> (params', opt_state', metrics)."""
+
+    def train_step(params, opt_state: AdamWState, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch=batch
+        )
+        params, opt_state, om = apply_updates(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_lm_prefill(cfg):
+    from repro.models.transformer import prefill
+
+    def step(params, batch):
+        logits, cache, cur_len = prefill(params, cfg, batch["tokens"])
+        return {"logits": logits, "cache": cache, "cur_len": cur_len}
+
+    return step
+
+
+def make_lm_decode(cfg):
+    from repro.models.transformer import decode_step
+
+    def step(params, cache, batch, cur_len):
+        logits, cache, cur_len = decode_step(params, cfg, cache, batch["tokens"], cur_len)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return {"logits": logits, "next": next_tok}, cache, cur_len
+
+    return step
+
+
+def make_recsys_serve(cfg):
+    from repro.models.recsys import serve_scores
+
+    def step(params, batch):
+        return serve_scores(params, cfg, batch)
+
+    return step
+
+
+def make_recsys_retrieval(cfg, k: int = 100):
+    from repro.models.recsys import retrieval_topk
+
+    def step(params, batch):
+        scores, idx = retrieval_topk(params, cfg, batch, k=k)
+        return {"scores": scores, "indices": idx}
+
+    return step

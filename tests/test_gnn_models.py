@@ -1,0 +1,168 @@
+"""GNN model behaviour: exact equivariance/invariance properties (MACE, EGNN),
+permutation invariance, spherical-harmonics identities, segment ops."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.data.synthetic import gnn_molecule_batch
+from repro.train.step import init_model_params, specialize_gnn_config
+
+
+def _rotation_matrix(rng):
+    a = rng.standard_normal((3, 3))
+    q, r = np.linalg.qr(a)
+    q = q * np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] = -q[:, 0]
+    return jnp.asarray(q.astype(np.float32))
+
+
+def _mol_batch(seed=0, batch=3, nodes=10, edges=30, d_feat=8):
+    rng = np.random.default_rng(seed)
+    return gnn_molecule_batch(rng, batch, nodes, edges, d_feat, True), rng
+
+
+@pytest.mark.parametrize("arch", ["mace", "egnn"])
+def test_energy_rotation_invariance(arch):
+    """Rotating + translating all positions must not change energies."""
+    import importlib
+
+    spec = get_arch(arch)
+    cfg = dataclasses.replace(
+        specialize_gnn_config(spec.reduced_config, {"d_feat": 8, "n_classes": 0}),
+        compute_dtype=jnp.float32,
+    )
+    m = importlib.import_module(
+        {"mace": "repro.models.gnn.mace", "egnn": "repro.models.gnn.egnn"}[arch]
+    )
+    params = init_model_params(spec, jax.random.PRNGKey(0), cfg=cfg)
+    batch, rng = _mol_batch()
+    loss1, met1 = m.loss_energy(params, cfg, batch)
+    R = _rotation_matrix(rng)
+    t = jnp.asarray(rng.standard_normal(3).astype(np.float32))
+    batch_rot = dict(batch)
+    batch_rot["positions"] = batch["positions"] @ R.T + t
+    loss2, met2 = m.loss_energy(params, cfg, batch_rot)
+    assert float(jnp.abs(loss1 - loss2)) < 1e-4
+
+
+def test_egnn_coordinates_are_equivariant():
+    """EGNN coordinate outputs rotate exactly with the input rotation."""
+    from repro.models.gnn import egnn as m
+
+    spec = get_arch("egnn")
+    cfg = dataclasses.replace(
+        specialize_gnn_config(spec.reduced_config, {"d_feat": 8, "n_classes": 0}),
+        compute_dtype=jnp.float32,
+    )
+    params = init_model_params(spec, jax.random.PRNGKey(0), cfg=cfg)
+    batch, rng = _mol_batch(seed=3)
+    _, x1 = m.forward(params, cfg, batch)
+    R = _rotation_matrix(rng)
+    batch_rot = dict(batch)
+    batch_rot["positions"] = batch["positions"] @ R.T
+    _, x2 = m.forward(params, cfg, batch_rot)
+    np.testing.assert_allclose(
+        np.asarray(x1 @ R.T), np.asarray(x2), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_spherical_harmonics_orthonormal():
+    """Monte-Carlo check: int Y_a Y_b dOmega = delta_ab (l<=2)."""
+    from repro.models.gnn.mace import spherical_harmonics_l2
+
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal((200_000, 3))
+    v = v / np.linalg.norm(v, axis=1, keepdims=True)
+    Y = np.asarray(spherical_harmonics_l2(jnp.asarray(v.astype(np.float32))))
+    gram = 4 * np.pi * (Y.T @ Y) / v.shape[0]
+    np.testing.assert_allclose(gram, np.eye(9), atol=0.05)
+
+
+def test_mace_invariants_rotation_stable():
+    """The B-basis invariant monomials are exactly rotation invariant."""
+    from repro.models.gnn.mace import _invariants, spherical_harmonics_l2
+
+    rng = np.random.default_rng(1)
+    v = rng.standard_normal((50, 3)).astype(np.float32)
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    R = _rotation_matrix(rng)
+    h = rng.standard_normal((50, 4)).astype(np.float32)
+    A1 = (spherical_harmonics_l2(jnp.asarray(v))[:, :, None] * h[:, None, :]).sum(0)[None]
+    A2 = (spherical_harmonics_l2(jnp.asarray(v) @ R.T)[:, :, None] * h[:, None, :]).sum(0)[None]
+    np.testing.assert_allclose(
+        np.asarray(_invariants(A1)), np.asarray(_invariants(A2)), rtol=2e-3, atol=2e-3
+    )
+
+
+@pytest.mark.parametrize("arch", ["mace", "egnn", "graphsage-reddit", "equiformer-v2"])
+def test_node_permutation_equivariance(arch):
+    """Relabeling nodes permutes outputs correspondingly (message passing is
+    symmetric)."""
+    import importlib
+
+    spec = get_arch(arch)
+    shape = {"d_feat": 8, "n_classes": 3}
+    cfg = dataclasses.replace(
+        specialize_gnn_config(spec.reduced_config, shape), compute_dtype=jnp.float32
+    )
+    mod = {
+        "mace": "repro.models.gnn.mace",
+        "egnn": "repro.models.gnn.egnn",
+        "graphsage-reddit": "repro.models.gnn.graphsage",
+        "equiformer-v2": "repro.models.gnn.equiformer_v2",
+    }[arch]
+    m = importlib.import_module(mod)
+    params = init_model_params(spec, jax.random.PRNGKey(0), cfg=cfg)
+
+    rng = np.random.default_rng(5)
+    n, e = 20, 60
+    batch = {
+        "features": jnp.asarray(rng.standard_normal((n, 8), dtype=np.float32)),
+        "src": jnp.asarray(rng.integers(0, n, e, dtype=np.int32)),
+        "dst": jnp.asarray(rng.integers(0, n, e, dtype=np.int32)),
+        "edge_mask": jnp.ones((e,), bool),
+        "positions": jnp.asarray(rng.standard_normal((n, 3), dtype=np.float32)),
+    }
+    perm = rng.permutation(n).astype(np.int32)
+    inv = np.empty(n, np.int32)
+    inv[perm] = np.arange(n, dtype=np.int32)
+    batch_p = {
+        "features": batch["features"][perm],
+        "src": jnp.asarray(inv)[batch["src"]],
+        "dst": jnp.asarray(inv)[batch["dst"]],
+        "edge_mask": batch["edge_mask"],
+        "positions": batch["positions"][perm],
+    }
+
+    if arch == "graphsage-reddit":
+        out1 = m.forward_full(params, cfg, batch)
+        out2 = m.forward_full(params, cfg, batch_p)
+    elif arch == "equiformer-v2":
+        out1 = m.forward(params, cfg, batch)[:, 0, :]
+        out2 = m.forward(params, cfg, batch_p)[:, 0, :]
+    elif arch == "egnn":
+        out1 = m.forward(params, cfg, batch)[0]
+        out2 = m.forward(params, cfg, batch_p)[0]
+    else:
+        out1 = m.forward(params, cfg, batch)
+        out2 = m.forward(params, cfg, batch_p)
+    np.testing.assert_allclose(
+        np.asarray(out1)[perm], np.asarray(out2), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_segment_softmax_normalizes():
+    from repro.models.common import segment_softmax
+
+    rng = np.random.default_rng(0)
+    scores = jnp.asarray(rng.standard_normal(100).astype(np.float32))
+    seg = jnp.asarray(rng.integers(0, 10, 100, dtype=np.int32))
+    p = segment_softmax(scores, seg, 10)
+    sums = jax.ops.segment_sum(p, seg, num_segments=10)
+    np.testing.assert_allclose(np.asarray(sums), np.ones(10), rtol=1e-5)

@@ -1,0 +1,130 @@
+"""Launch-layer coverage: cell building, sharding sanitization, HLO
+analyzer and roofline math.  Mesh-dependent parts run in a subprocess with
+forced host devices (jax locks the device count at first init)."""
+
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.launch import hlo_stats
+from repro.launch.roofline import Roofline
+
+# ------------------------------ hlo_stats -----------------------------------
+
+_TOY_HLO = """
+%body.1 (p.1: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p.1 = (s32[], f32[8,128]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p.1), index=0
+  %g1 = f32[8,128]{1,0} get-tuple-element(%p.1), index=1
+  %c1 = s32[] constant(1)
+  %add.1 = s32[] add(%g0, %c1)
+  %w = f32[128,128]{1,0} constant({...})
+  %dot.1 = f32[8,128]{1,0} dot(%g1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%sum
+  ROOT %t = (s32[], f32[8,128]) tuple(%add.1, %ar)
+}
+
+%cond.1 (p.2: (s32[], f32[8,128])) -> pred[] {
+  %p.2 = (s32[], f32[8,128]) parameter(0)
+  %g2 = s32[] get-tuple-element(%p.2), index=0
+  %c10 = s32[] constant(10)
+  ROOT %lt = pred[] compare(%g2, %c10), direction=LT
+}
+
+ENTRY %main.1 (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %t0 = (s32[], f32[8,128]) tuple(%c0, %a)
+  %w1 = (s32[], f32[8,128]) while(%t0), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%w1), index=1
+}
+"""
+
+
+def test_hlo_stats_trip_count_and_flops():
+    stats = hlo_stats.analyze(_TOY_HLO, n_devices=8)
+    # dot: 2*8*128*128 flops, x10 loop trips
+    assert stats["flops"] == pytest.approx(2 * 8 * 128 * 128 * 10)
+    # all-reduce over groups of 4: 2 * 4KiB * 3/4 per trip
+    assert stats["collective_bytes"] == pytest.approx(
+        2 * (8 * 128 * 4) * 3 / 4 * 10
+    )
+    assert stats["unknown_trip_loops"] == 0
+
+
+def test_hlo_stats_promoted_allreduce_halved():
+    hlo = _TOY_HLO.replace("to_apply=%sum", "to_apply=%add.clone_promoted")
+    stats = hlo_stats.analyze(hlo, n_devices=8)
+    assert stats["collective_bytes"] == pytest.approx(
+        2 * (8 * 128 * 2) * 3 / 4 * 10  # bf16 wire
+    )
+
+
+def test_roofline_terms_and_bound():
+    r = Roofline(
+        arch="x", shape="y", mesh="16x16", n_devices=256,
+        flops_per_dev=197e12,  # exactly 1 second of compute
+        hbm_bytes_per_dev=819e9 / 2,  # 0.5 s
+        coll_bytes_per_dev=50e9 * 2,  # 2 s
+        model_flops_total=197e12 * 256 / 2,  # half the compiled flops useful
+    )
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(2.0)
+    assert r.bound == "collective"
+    assert r.model_flops_ratio == pytest.approx(0.5)
+    # useful/chips/peak = 0.5 s; step = 2 s -> 25%
+    assert r.roofline_fraction == pytest.approx(0.25)
+
+
+# --------------------------- cell building (subprocess) ---------------------
+
+_CELL_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from repro.launch.mesh import make_mesh
+from repro.launch.cells import build_cell, lower_cell, SkipCell
+from repro.launch import hlo_stats
+
+mesh = make_mesh((2, 4), ("data", "model"))
+out = {}
+for arch, shape in [
+    ("llama3.2-3b", "train_4k"),
+    ("graphsage-reddit", "ogb_products"),
+    ("two-tower-retrieval", "serve_p99"),
+    ("densest-mapreduce", "flickr_sm"),
+]:
+    cell = build_cell(arch, shape, mesh=mesh)
+    compiled = lower_cell(cell).compile()
+    stats = hlo_stats.analyze(compiled.as_text(), 8)
+    out[f"{arch}/{shape}"] = {
+        "flops": stats["flops"], "coll": stats["collective_bytes"],
+    }
+# skip machinery
+try:
+    build_cell("qwen2-72b", "long_500k", mesh=mesh)
+    out["skip"] = "MISSED"
+except SkipCell:
+    out["skip"] = "ok"
+print("RESULT=" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_cells_compile_on_small_mesh():
+    res = subprocess.run(
+        [sys.executable, "-c", _CELL_SCRIPT],
+        capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    line = [l for l in res.stdout.splitlines() if l.startswith("RESULT=")]
+    assert line, res.stderr[-2000:]
+    out = json.loads(line[0][len("RESULT="):])
+    assert out["skip"] == "ok"
+    assert out["llama3.2-3b/train_4k"]["flops"] > 1e12
+    assert out["densest-mapreduce/flickr_sm"]["coll"] > 0

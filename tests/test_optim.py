@@ -1,0 +1,107 @@
+"""Optimizer substrate: int8 block-quantized Adam moments under jit (the
+llama4 configuration), moment-dtype equivalence bounds, gradient-compression
+error feedback."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import AdamWConfig, apply_updates, init_state
+from repro.optim.adamw import Quantized, _dequantize, _quantize
+from repro.optim.compression import (
+    CompressionConfig,
+    compress_decompress_psum,
+    init_error_state,
+)
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal((33, 17)).astype(np.float32)),
+        "b": jnp.asarray(rng.standard_normal(7).astype(np.float32)),
+    }
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(1000).astype(np.float32) * 3)
+    q = _quantize(x, 256)
+    y = _dequantize(q)
+    # per-block absmax int8: error <= scale/2 = absmax/254
+    assert float(jnp.max(jnp.abs(x - y))) <= float(jnp.max(jnp.abs(x))) / 127
+
+
+@pytest.mark.parametrize("dtype", ["fp32", "bf16", "int8"])
+def test_adamw_moment_dtypes_under_jit(dtype):
+    """int8 moments cross the jit boundary (Quantized has static shape) and
+    track the fp32 trajectory within quantization tolerance."""
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.0, moment_dtype=dtype)
+    cfg32 = AdamWConfig(lr=1e-2, weight_decay=0.0, moment_dtype="fp32")
+    params = _params()
+    state = init_state(params, cfg)
+    state32 = init_state(params, cfg32)
+    p, p32 = params, params
+
+    @jax.jit
+    def step(p, s, g, c_is_int8=(dtype == "int8")):
+        return apply_updates(p, g, s, cfg)
+
+    @jax.jit
+    def step32(p, s, g):
+        return apply_updates(p, g, s, cfg32)
+
+    rng = np.random.default_rng(2)
+    for i in range(5):
+        g = jax.tree.map(
+            lambda x: jnp.asarray(
+                rng.standard_normal(x.shape).astype(np.float32)
+            ),
+            params,
+        )
+        p, state, _ = step(p, state, g)
+        p32, state32, _ = step32(p32, state32, g)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p32)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=0, atol=5e-3
+        )
+
+
+def test_int8_state_is_actually_small():
+    cfg = AdamWConfig(moment_dtype="int8")
+    params = {"w": jnp.zeros((1024, 256), jnp.float32)}
+    st = init_state(params, cfg)
+    q = st.mu["w"]
+    assert isinstance(q, Quantized)
+    assert q.q.dtype == jnp.int8
+    bytes_q = q.q.size + q.scale.size * 4
+    assert bytes_q < 1024 * 256 * 4 * 0.3  # >3x smaller than fp32
+
+
+def test_compression_error_feedback_does_not_accumulate():
+    """int8+EF: the *running* compression error stays bounded while the sum
+    of compressed grads converges to the sum of true grads."""
+    cfg = CompressionConfig(kind="int8_ef", block=64)
+    rng = np.random.default_rng(3)
+    g_true_sum = np.zeros(512, np.float64)
+    g_comp_sum = np.zeros(512, np.float64)
+    err = {"g": jnp.zeros(512)}
+    for i in range(30):
+        g = rng.standard_normal(512).astype(np.float32) * 0.1
+        g_true_sum += g
+        out, err, _ = compress_decompress_psum(
+            {"g": jnp.asarray(g)}, err, cfg
+        )
+        g_comp_sum += np.asarray(out["g"], np.float64)
+    # with error feedback the cumulative sums track each other closely
+    drift = np.abs(g_comp_sum - g_true_sum).max()
+    assert drift < 0.05, drift
+
+
+def test_bf16_compression_halves_and_roundtrips():
+    cfg = CompressionConfig(kind="bf16")
+    g = {"g": jnp.asarray(np.linspace(-1, 1, 128, dtype=np.float32))}
+    out, _, factor = compress_decompress_psum(g, None, cfg)
+    assert factor == 0.5
+    np.testing.assert_allclose(np.asarray(out["g"]), np.asarray(g["g"]), atol=1e-2)
