@@ -1,0 +1,42 @@
+"""Version compatibility shims for jax APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace (and its replication-check kwarg was renamed from
+``check_rep`` to ``check_vma``) across jax releases.  Every module in this
+repo imports it from here so the whole tree works on either side of the
+move:
+
+    from repro.compat import shard_map
+
+The wrapper accepts both ``check_vma`` and ``check_rep`` and forwards
+whichever spelling the installed jax understands.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+try:  # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map_impl  # type: ignore[attr-defined]
+except ImportError:  # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_IMPL_PARAMS = frozenset(inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f: Callable[..., Any], **kwargs: Any) -> Callable[..., Any]:
+    """``jax.shard_map`` / ``jax.experimental.shard_map.shard_map`` shim.
+
+    Keyword-only usage (``mesh=``, ``in_specs=``, ``out_specs=``, and
+    optionally ``check_vma=``/``check_rep=``), which is how every call site
+    in this repo invokes it.
+    """
+    check = kwargs.pop("check_vma", kwargs.pop("check_rep", None))
+    if check is not None:
+        if "check_vma" in _IMPL_PARAMS:
+            kwargs["check_vma"] = check
+        elif "check_rep" in _IMPL_PARAMS:
+            kwargs["check_rep"] = check
+        # else: the installed jax dropped the flag entirely; omit it.
+    return _shard_map_impl(f, **kwargs)

@@ -1,5 +1,9 @@
 """Core library: the paper's densest-subgraph algorithms.
 
+All peel variants are one engine (core/engine.py): a single pass body
+parameterized by RemovalPolicy × DegreeBackend, launched on a jit, host
+streaming, or shard_map substrate.
+
 Public API:
   densest_subgraph                 Algorithm 1 (undirected, (2+2eps)-approx)
   densest_subgraph_at_least_k      Algorithm 2 (size >= k, (3+3eps)-approx)
@@ -10,17 +14,33 @@ Public API:
   StreamingDensest                 semi-streaming driver w/ checkpoint+stragglers
   densest_subgraph_exact           Goldberg max-flow exact oracle
   charikar_greedy                  node-at-a-time 2-approx baseline [10]
+  run_peel / PeelOutcome           the engine itself (policies × backends)
 """
 
 from repro.core.charikar import charikar_greedy
 from repro.core.countsketch import (
+    SketchBackend,
     densest_subgraph_sketched,
     make_sketch_params,
     query_degrees,
     sketch_degrees_from_edges,
+    sketch_endpoint_counters,
     sketched_degree_fn,
 )
 from repro.core.density import density_of, max_passes_bound, undirected_stats
+from repro.core.engine import (
+    AtLeastKFraction,
+    DirectedST,
+    ExactBackend,
+    FnBackend,
+    MeshSegmentSumBackend,
+    PeelOutcome,
+    PeelState,
+    UndirectedThreshold,
+    removal_threshold,
+    run_peel,
+    undirected_pass_step,
+)
 from repro.core.exact import (
     densest_directed_brute,
     densest_subgraph_brute,
@@ -39,12 +59,22 @@ from repro.core.peel_directed import (
     densest_directed_search_vmapped,
     densest_subgraph_directed,
 )
-from repro.core.peel_topk import densest_subgraph_at_least_k
+from repro.core.peel_topk import PeelTopKResult, densest_subgraph_at_least_k
 from repro.core.streaming import StreamingDensest, chunked_from_arrays
 
 __all__ = [
+    "AtLeastKFraction",
+    "DirectedST",
+    "ExactBackend",
+    "FnBackend",
+    "MeshSegmentSumBackend",
+    "PeelOutcome",
     "PeelResult",
+    "PeelState",
+    "PeelTopKResult",
+    "SketchBackend",
     "StreamingDensest",
+    "UndirectedThreshold",
     "c_grid",
     "charikar_greedy",
     "chunked_from_arrays",
@@ -64,8 +94,12 @@ __all__ = [
     "make_distributed_peel",
     "make_sketch_params",
     "query_degrees",
+    "removal_threshold",
+    "run_peel",
     "shard_edges",
     "sketch_degrees_from_edges",
+    "sketch_endpoint_counters",
     "sketched_degree_fn",
+    "undirected_pass_step",
     "undirected_stats",
 ]

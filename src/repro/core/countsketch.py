@@ -24,6 +24,17 @@ import numpy as np
 from repro.core.peel import PeelResult, densest_subgraph
 from repro.graph.edgelist import EdgeList
 
+__all__ = [
+    "SketchBackend",
+    "SketchParams",
+    "densest_subgraph_sketched",
+    "make_sketch_params",
+    "query_degrees",
+    "sketch_degrees_from_edges",
+    "sketch_endpoint_counters",
+    "sketched_degree_fn",
+]
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +82,19 @@ def _hash_sign(p: SketchParams, x: jax.Array) -> jax.Array:
     return jnp.where((h >> 31) == 0, 1.0, -1.0).astype(jnp.float32)
 
 
+def sketch_endpoint_counters(
+    p: SketchParams, ids: jax.Array, w_alive: jax.Array
+) -> jax.Array:
+    """Counter table float32[t, b] for ONE endpoint array of the edge stream
+    (update counter (i, h_i(x)) by g_i(x)·w for every edge endpoint x)."""
+    t, b = p.n_tables, p.n_buckets
+    buckets = _hash_bucket(p, ids)  # [t, E]
+    signs = _hash_sign(p, ids)  # [t, E]
+    flat_idx = (buckets + (jnp.arange(t, dtype=jnp.int32) * b)[:, None]).reshape(-1)
+    vals = (signs * w_alive[None, :]).reshape(-1)
+    return jax.ops.segment_sum(vals, flat_idx, num_segments=t * b).reshape(t, b)
+
+
 def sketch_degrees_from_edges(
     p: SketchParams, edges: EdgeList, w_alive: jax.Array
 ) -> jax.Array:
@@ -79,16 +103,9 @@ def sketch_degrees_from_edges(
     Each alive edge contributes to both endpoints' counters, exactly the
     streaming update rule of §5.1 (weighted for weighted graphs).
     """
-    t, b = p.n_tables, p.n_buckets
-
-    def accumulate(x: jax.Array) -> jax.Array:
-        buckets = _hash_bucket(p, x)  # [t, E]
-        signs = _hash_sign(p, x)  # [t, E]
-        flat_idx = (buckets + (jnp.arange(t, dtype=jnp.int32) * b)[:, None]).reshape(-1)
-        vals = (signs * w_alive[None, :]).reshape(-1)
-        return jax.ops.segment_sum(vals, flat_idx, num_segments=t * b).reshape(t, b)
-
-    return accumulate(edges.src) + accumulate(edges.dst)
+    return sketch_endpoint_counters(p, edges.src, w_alive) + sketch_endpoint_counters(
+        p, edges.dst, w_alive
+    )
 
 
 def query_degrees(p: SketchParams, counters: jax.Array, nodes: jax.Array) -> jax.Array:
@@ -97,6 +114,32 @@ def query_degrees(p: SketchParams, counters: jax.Array, nodes: jax.Array) -> jax
     signs = _hash_sign(p, nodes)  # [t, N]
     est = jnp.take_along_axis(counters, buckets, axis=1) * signs  # [t, N]
     return jnp.median(est, axis=0)
+
+
+class SketchBackend:
+    """Engine ``DegreeBackend`` backed by the §5.1 Count-Sketch.
+
+    Undirected degrees use the shared two-endpoint counter table; the
+    directed rule keeps SEPARATE out/in tables (accumulate src endpoints
+    only / dst endpoints only) so Algorithm 3's out- and in-degree
+    estimates stay unbiased for their own side.
+    """
+
+    def __init__(self, params: SketchParams):
+        self.params = params
+
+    def undirected(self, edges: EdgeList, w_alive: jax.Array):
+        counters = sketch_degrees_from_edges(self.params, edges, w_alive)
+        nodes = jnp.arange(edges.n_nodes, dtype=jnp.int32)
+        return query_degrees(self.params, counters, nodes), jnp.sum(w_alive)
+
+    def directed(self, edges: EdgeList, w_alive: jax.Array):
+        c_out = sketch_endpoint_counters(self.params, edges.src, w_alive)
+        c_in = sketch_endpoint_counters(self.params, edges.dst, w_alive)
+        nodes = jnp.arange(edges.n_nodes, dtype=jnp.int32)
+        out_deg = query_degrees(self.params, c_out, nodes)
+        in_deg = query_degrees(self.params, c_in, nodes)
+        return out_deg, in_deg, jnp.sum(w_alive)
 
 
 def sketched_degree_fn(p: SketchParams):

@@ -1,0 +1,480 @@
+"""PeelEngine — the single peel-pass implementation behind every algorithm.
+
+Algorithms 1, 2 and 3 of the paper share one pass structure: count induced
+degrees, compute the density, record the best intermediate set, remove the
+below-threshold nodes.  This module implements that pass body EXACTLY ONCE
+as a ``jax.lax.while_loop`` parameterized along two orthogonal axes:
+
+  * a **RemovalPolicy** — which nodes leave the graph each pass, and what
+    "density" and "keep going" mean;
+  * a **DegreeBackend** — how induced degrees (and the total alive edge
+    weight) are computed from the edge list.
+
+A third axis, the **substrate**, is how the loop is launched: plain ``jit``
+(core/peel*.py), a host-side chunked pass loop (core/streaming.py, which
+reuses :func:`undirected_pass_step` so the removal rule still lives here),
+or ``shard_map`` over a device mesh (core/mapreduce.py, which runs
+:func:`run_peel` *inside* the mapped function with a psum'ing backend).
+
+Policy × backend matrix (the paper section each cell realizes)::
+
+    policy \\ backend   | exact segsum | count-sketch | pallas tiled | mesh psum
+    -------------------+--------------+--------------+--------------+-----------
+    undirected_        | Alg 1 (§4.1) | §5.1, Table 4| kernels/     | §5.2 MapReduce
+      threshold        |              |              | peel_degree  | (+ sketch §5.1)
+    at_least_k_        | Alg 2 (§4.2) |      —*      |      —*      | §5.2 (topk)
+      fraction         |              |              |              |
+    directed_st        | Alg 3 (§4.3) | §5.1 per-    |      —*      | §5.2 (directed)
+                       |              | endpoint     |              |
+
+    —* = composes through the same engine but has no dedicated wrapper yet;
+    any DegreeBackend works with any policy of matching directedness.
+
+The removal threshold ``2(1+eps)·rho(S)`` exists only here
+(:func:`removal_threshold`); wrappers must not re-derive it.
+
+Adding a new backend
+====================
+Implement an object with
+
+  ``undirected(edges, w_alive) -> (deg[N], total)`` and/or
+  ``directed(edges, w_alive) -> (out_deg[N], in_deg[N], total)``
+
+where ``w_alive`` is the per-edge alive weight the engine already computed
+(0.0 for masked/dead edges).  Return the *global* degree vector — inside a
+``shard_map`` substrate that means psum'ing your local partials (fuse the
+scalar ``total`` into the same reduction; see :class:`MeshSegmentSumBackend`).
+Then pass an instance to :func:`run_peel` — no loop code is needed.
+
+Adding a new policy is the same exercise against :class:`RemovalPolicy`:
+density/eligible/keep_going plus a ``removal`` rule returning the per-side
+removal bitmaps.  Parallel peeling variants (shared-memory batched removal,
+directed-stream policies) slot in here rather than as new loops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.edgelist import EdgeList
+
+# ---------------------------------------------------------------------------
+# The one threshold site (acceptance: grep for "2.0 * (1.0 + eps)")
+# ---------------------------------------------------------------------------
+
+
+def removal_threshold(eps: float, rho: jax.Array) -> jax.Array:
+    """The paper's removal threshold 2(1+eps)·rho(S) — the only place the
+    expression exists in the codebase."""
+    return 2.0 * (1.0 + eps) * rho
+
+
+# ---------------------------------------------------------------------------
+# State / outcome — the single pair replacing the old per-loop families
+# ---------------------------------------------------------------------------
+
+
+class PassStats(NamedTuple):
+    """Per-pass scalars handed to the policy's removal rule."""
+
+    rho: jax.Array  # float32[] density of the current set
+    total: jax.Array  # float32[] alive edge weight |E(S)| (or |E(S,T)|)
+    n_s: jax.Array  # int32[] |S|
+    n_t: jax.Array  # int32[] |T| (== |S| for undirected policies)
+
+
+class PeelState(NamedTuple):
+    """Loop carry.  For undirected policies the T-side arrays are empty
+    ``bool[0]`` placeholders so the pytree structure stays uniform."""
+
+    alive: jax.Array  # bool[N] current S
+    t_alive: jax.Array  # bool[N] current T (directed) | bool[0]
+    best_alive: jax.Array  # bool[N] best S seen
+    best_t: jax.Array  # bool[N] best T seen (directed) | bool[0]
+    best_rho: jax.Array  # float32[]
+    best_size: jax.Array  # int32[] |S| of the best set
+    t: jax.Array  # int32[] pass counter
+    history_n: jax.Array  # int32[hist_len]
+    history_m: jax.Array  # float32[hist_len]
+    history_rho: jax.Array  # float32[hist_len]
+
+
+class PeelOutcome(NamedTuple):
+    """Result of any peel run; every public result type aliases this."""
+
+    best_alive: jax.Array  # bool[N] the output set S~ (S side for directed)
+    best_t: jax.Array  # bool[N] T side (directed) | bool[0]
+    best_density: jax.Array  # float32[] rho of the best set
+    best_size: jax.Array  # int32[] |S~|
+    passes: jax.Array  # int32[] passes executed
+    alive: jax.Array  # bool[N] FINAL S bitmap (for phased/compacted runs)
+    t_alive: jax.Array  # bool[N] final T bitmap | bool[0]
+    history_n: jax.Array  # int32[hist_len] per-pass |S| (-1 padding)
+    history_m: jax.Array  # float32[hist_len] per-pass |E(S)|
+    history_rho: jax.Array  # float32[hist_len] per-pass rho
+
+    @property
+    def best_s(self) -> jax.Array:
+        """Directed-result spelling of the S-side best bitmap."""
+        return self.best_alive
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+
+class RemovalPolicy(Protocol):
+    """What a pass removes; instances may close over traced scalars."""
+
+    directed: bool
+
+    def density(self, total: jax.Array, n_s: jax.Array, n_t: jax.Array) -> jax.Array:
+        """rho of the current set(s)."""
+
+    def eligible(self, n_s: jax.Array, n_t: jax.Array) -> jax.Array:
+        """May the current set become the recorded best?"""
+
+    def keep_going(self, n_s: jax.Array, n_t: jax.Array) -> jax.Array:
+        """while-loop continuation test (max_passes is handled by the engine)."""
+
+    def removal(
+        self,
+        s_alive: jax.Array,
+        t_alive: jax.Array,
+        deg_s: jax.Array,
+        deg_t: jax.Array,
+        stats: PassStats,
+    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """(remove-from-S bitmap, remove-from-T bitmap or None)."""
+
+
+def _undirected_density(total, n_s):
+    return jnp.where(n_s > 0, total / jnp.maximum(n_s, 1), 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class UndirectedThreshold:
+    """Algorithm 1: drop every node with deg <= 2(1+eps)·rho(S).
+
+    The min-degree progress fallback (remove the current minimum-degree
+    nodes when rounding would make the removal set empty) preserves the
+    approximation proof verbatim and guarantees termination.
+    """
+
+    eps: float
+    directed: bool = dataclasses.field(default=False, init=False)
+
+    def density(self, total, n_s, n_t):
+        return _undirected_density(total, n_s)
+
+    def eligible(self, n_s, n_t):
+        return n_s > 0
+
+    def keep_going(self, n_s, n_t):
+        return n_s > 0
+
+    def removal(self, s_alive, t_alive, deg_s, deg_t, stats):
+        thresh = removal_threshold(self.eps, stats.rho)
+        deg_alive = jnp.where(s_alive, deg_s, jnp.inf)
+        min_deg = jnp.min(deg_alive)
+        rm = s_alive & ((deg_s <= thresh) | (deg_s <= min_deg))
+        return rm, None
+
+
+@dataclasses.dataclass(frozen=True)
+class AtLeastKFraction:
+    """Algorithm 2: of the below-threshold candidates A~(S), remove only the
+    eps/(1+eps)·|S| lowest-degree ones (a deterministic choice of the subset
+    the paper leaves free); only sets with |S| >= k are eligible.
+
+    ``ceil_count``/``min_deg_fallback`` select between the two historical
+    realizations (single-device used floor + fallback; the distributed one
+    used ceil without) so both keep their exact pre-refactor outputs.
+    """
+
+    k: int
+    eps: float
+    min_deg_fallback: bool = True
+    ceil_count: bool = False
+    directed: bool = dataclasses.field(default=False, init=False)
+
+    def density(self, total, n_s, n_t):
+        return _undirected_density(total, n_s)
+
+    def eligible(self, n_s, n_t):
+        return n_s >= self.k
+
+    def keep_going(self, n_s, n_t):
+        return n_s >= self.k
+
+    def removal(self, s_alive, t_alive, deg_s, deg_t, stats):
+        thresh = removal_threshold(self.eps, stats.rho)
+        if self.min_deg_fallback:
+            deg_alive = jnp.where(s_alive, deg_s, jnp.inf)
+            cand = s_alive & ((deg_s <= thresh) | (deg_s <= jnp.min(deg_alive)))
+        else:
+            cand = s_alive & (deg_s <= thresh)
+        nf = stats.n_s.astype(jnp.float32)
+        if self.ceil_count:
+            r = jnp.ceil(nf * self.eps / (1.0 + self.eps)).astype(jnp.int32)
+        else:
+            r = ((self.eps / (1.0 + self.eps)) * nf).astype(jnp.int32)
+        r = jnp.maximum(r, 1)
+        # Rank candidates by (degree, node id): stable argsort puts every
+        # candidate ahead of non-candidates (their key is +inf).
+        n = deg_s.shape[0]
+        key = jnp.where(cand, deg_s, jnp.inf)
+        order = jnp.argsort(key)
+        rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+        rm = cand & (rank < r)
+        return rm, None
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectedST:
+    """Algorithm 3 for a fixed ratio guess c = |S|/|T| (c may be traced):
+    peel S by out-degree when |S|/|T| >= c, else peel T by in-degree."""
+
+    eps: float
+    c: Any  # float or traced float32 scalar (vmap-able over the c grid)
+    directed: bool = dataclasses.field(default=True, init=False)
+
+    def density(self, total, n_s, n_t):
+        denom = jnp.sqrt(
+            jnp.maximum(n_s.astype(jnp.float32), 1.0)
+            * jnp.maximum(n_t.astype(jnp.float32), 1.0)
+        )
+        return jnp.where((n_s > 0) & (n_t > 0), total / denom, 0.0)
+
+    def eligible(self, n_s, n_t):
+        return (n_s > 0) & (n_t > 0)
+
+    def keep_going(self, n_s, n_t):
+        return (n_s > 0) & (n_t > 0)
+
+    def removal(self, s_alive, t_alive, out_deg, in_deg, stats):
+        ns_f = jnp.maximum(stats.n_s.astype(jnp.float32), 1.0)
+        nt_f = jnp.maximum(stats.n_t.astype(jnp.float32), 1.0)
+        peel_s = ns_f / nt_f >= self.c
+        thr_s = (1.0 + self.eps) * stats.total / ns_f
+        outd = jnp.where(s_alive, out_deg, jnp.inf)
+        rm_s = s_alive & ((out_deg <= thr_s) | (out_deg <= jnp.min(outd)))
+        thr_t = (1.0 + self.eps) * stats.total / nt_f
+        ind = jnp.where(t_alive, in_deg, jnp.inf)
+        rm_t = t_alive & ((in_deg <= thr_t) | (in_deg <= jnp.min(ind)))
+        return rm_s & peel_s, rm_t & ~peel_s
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+class DegreeBackend(Protocol):
+    """Induced-degree computation.  ``w_alive`` is the engine-computed
+    per-edge alive weight; implementations return GLOBAL degrees + total."""
+
+    def undirected(
+        self, edges: EdgeList, w_alive: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]: ...
+
+    def directed(
+        self, edges: EdgeList, w_alive: jax.Array
+    ) -> Tuple[jax.Array, jax.Array, jax.Array]: ...
+
+
+class ExactBackend:
+    """segment_sum degrees — the paper's reduce-side count (§5.2, 1 device)."""
+
+    def undirected(self, edges, w_alive):
+        n = edges.n_nodes
+        deg = jax.ops.segment_sum(w_alive, edges.src, num_segments=n)
+        deg = deg + jax.ops.segment_sum(w_alive, edges.dst, num_segments=n)
+        return deg, jnp.sum(w_alive)
+
+    def directed(self, edges, w_alive):
+        n = edges.n_nodes
+        out_deg = jax.ops.segment_sum(w_alive, edges.src, num_segments=n)
+        in_deg = jax.ops.segment_sum(w_alive, edges.dst, num_segments=n)
+        return out_deg, in_deg, jnp.sum(w_alive)
+
+
+class FnBackend:
+    """Adapts a legacy ``degree_fn(edges, w_alive) -> deg[N]`` hook (the
+    Count-Sketch and Pallas degree functions) into a DegreeBackend."""
+
+    def __init__(self, degree_fn):
+        self.degree_fn = degree_fn
+
+    def undirected(self, edges, w_alive):
+        return self.degree_fn(edges, w_alive), jnp.sum(w_alive)
+
+    def directed(self, edges, w_alive):
+        raise NotImplementedError(
+            "degree_fn hooks are undirected; use a backend with a directed() rule"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSegmentSumBackend:
+    """Mesh-sharded degrees for use INSIDE ``shard_map`` (paper §5.2).
+
+    Local segment_sum partials over the edge shard, then ONE fused psum of
+    ``[deg | total]`` over the edge axes — the density counter rides along
+    in the same collective, so a pass costs exactly one reduction.
+    ``wire_dtype='bf16'`` halves the degree psum (see core/mapreduce.py).
+    """
+
+    axes: Tuple[str, ...]
+    wire_dtype: str = "f32"
+
+    def _psum(self, packed: jax.Array) -> jax.Array:
+        if self.wire_dtype == "bf16":
+            return jax.lax.psum(packed.astype(jnp.bfloat16), self.axes).astype(
+                jnp.float32
+            )
+        return jax.lax.psum(packed, self.axes)
+
+    def undirected(self, edges, w_alive):
+        deg, total = ExactBackend().undirected(edges, w_alive)
+        packed = self._psum(jnp.concatenate([deg, total[None]]))
+        return packed[:-1], packed[-1]
+
+    def directed(self, edges, w_alive):
+        n = edges.n_nodes
+        out_deg, in_deg, total = ExactBackend().directed(edges, w_alive)
+        packed = self._psum(jnp.concatenate([out_deg, in_deg, total[None]]))
+        return packed[:n], packed[n : 2 * n], packed[-1]
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+def run_peel(
+    edges: EdgeList,
+    policy: RemovalPolicy,
+    backend: DegreeBackend,
+    max_passes: int,
+    *,
+    track_history: bool = False,
+    init_alive: Optional[jax.Array] = None,
+    init_best_empty: bool = False,
+) -> PeelOutcome:
+    """Runs the peel loop to completion.  Pure and traceable: wrappers add
+    ``jit``/``vmap``/``shard_map`` around it (substrate axis).
+
+    ``init_alive`` seeds S (default: all nodes) — used by phased/compacted
+    runs; ``init_best_empty`` starts the best set at empty instead of S_0
+    (the recorded best is then only ever a set the loop actually evaluated).
+    """
+    n = edges.n_nodes
+    directed = policy.directed
+    hist_len = max_passes if track_history else 1
+    dummy = jnp.zeros((0,), bool)
+
+    alive0 = jnp.ones((n,), bool) if init_alive is None else init_alive
+    best0 = jnp.zeros_like(alive0) if init_best_empty else alive0
+
+    def counts(s: PeelState):
+        n_s = jnp.sum(s.alive.astype(jnp.int32))
+        n_t = jnp.sum(s.t_alive.astype(jnp.int32)) if directed else n_s
+        return n_s, n_t
+
+    def cond(s: PeelState):
+        n_s, n_t = counts(s)
+        return policy.keep_going(n_s, n_t) & (s.t < max_passes)
+
+    def body(s: PeelState) -> PeelState:
+        ta = s.t_alive if directed else s.alive
+        # (3) of §5.2: the per-pass edge filter against the alive bitmap(s).
+        ok = edges.mask & s.alive[edges.src] & ta[edges.dst]
+        w_alive = jnp.where(ok, edges.weight, 0.0)
+        # (2): the degree count — the only backend-dependent step.
+        if directed:
+            deg_s, deg_t, total = backend.directed(edges, w_alive)
+        else:
+            deg_s, total = backend.undirected(edges, w_alive)
+            deg_t = deg_s
+        # (1): density + best-intermediate-set tracking.
+        n_s, n_t = counts(s)
+        rho = policy.density(total, n_s, n_t)
+        stats = PassStats(rho=rho, total=total, n_s=n_s, n_t=n_t)
+
+        improved = policy.eligible(n_s, n_t) & (rho > s.best_rho)
+        best_alive = jnp.where(improved, s.alive, s.best_alive)
+        best_t = jnp.where(improved, ta, s.best_t) if directed else s.best_t
+        best_rho = jnp.where(improved, rho, s.best_rho)
+        best_size = jnp.where(improved, n_s, s.best_size)
+
+        rm_s, rm_t = policy.removal(s.alive, ta, deg_s, deg_t, stats)
+        alive = s.alive & ~rm_s
+        t_alive = (ta & ~rm_t) if directed else s.t_alive
+
+        if track_history:
+            hn = s.history_n.at[s.t].set(n_s)
+            hm = s.history_m.at[s.t].set(total)
+            hr = s.history_rho.at[s.t].set(rho)
+        else:
+            hn, hm, hr = s.history_n, s.history_m, s.history_rho
+        return PeelState(
+            alive, t_alive, best_alive, best_t, best_rho, best_size,
+            s.t + 1, hn, hm, hr,
+        )
+
+    init = PeelState(
+        alive=alive0,
+        t_alive=alive0 if directed else dummy,
+        best_alive=best0,
+        best_t=best0 if directed else dummy,
+        best_rho=jnp.asarray(-jnp.inf, jnp.float32),
+        best_size=jnp.asarray(0, jnp.int32),
+        t=jnp.asarray(0, jnp.int32),
+        history_n=jnp.full((hist_len,), -1, jnp.int32),
+        history_m=jnp.zeros((hist_len,), jnp.float32),
+        history_rho=jnp.zeros((hist_len,), jnp.float32),
+    )
+    out = jax.lax.while_loop(cond, body, init)
+    return PeelOutcome(
+        best_alive=out.best_alive,
+        best_t=out.best_t,
+        best_density=out.best_rho,
+        best_size=out.best_size,
+        passes=out.t,
+        alive=out.alive,
+        t_alive=out.t_alive,
+        history_n=out.history_n,
+        history_m=out.history_m,
+        history_rho=out.history_rho,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-substrate policy step (the streaming driver's removal rule)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def undirected_pass_step(
+    alive: jax.Array, deg: jax.Array, total: jax.Array, eps: float
+) -> Tuple[jax.Array, jax.Array]:
+    """One Algorithm-1 pass on explicit node state: ``(new_alive, rho)``.
+
+    The semi-streaming driver accumulates ``deg``/``total`` by chunked
+    passes over out-of-core edges and then applies THIS step, so the
+    threshold/removal logic is shared with every in-core substrate.
+    """
+    policy = UndirectedThreshold(eps)
+    n_alive = jnp.sum(alive.astype(jnp.int32))
+    total = jnp.asarray(total, jnp.float32)
+    rho = policy.density(total, n_alive, n_alive)
+    stats = PassStats(rho=rho, total=total, n_s=n_alive, n_t=n_alive)
+    rm, _ = policy.removal(alive, alive, deg, deg, stats)
+    return alive & ~rm, rho

@@ -1,4 +1,4 @@
-"""MapReduce-model realization of Algorithm 1/3 on a JAX device mesh (§5.2).
+"""MapReduce-model realization of Algorithms 1/2/3 on a JAX device mesh (§5.2).
 
 The paper's per-pass MapReduce jobs become collectives over an edge-sharded
 mesh:
@@ -7,6 +7,13 @@ mesh:
   shuffle + reduce (count per key)  ->  jax.lax.psum over the edge axes
   density counters                  ->  psum of local edge weight
   node filter (2 MR passes)         ->  alive-bitmap mask, recomputed locally
+
+This module is the *shard_map substrate* of the PeelEngine: every builder
+constructs a local ``EdgeList`` view of its edge shard inside ``shard_map``
+and runs :func:`repro.core.engine.run_peel` with a psum'ing backend
+(:class:`~repro.core.engine.MeshSegmentSumBackend` or the Count-Sketch
+:class:`_MeshSketchBackend`).  The pass body — threshold, best-set tracking,
+removal — is the engine's; nothing here re-implements it.
 
 The *entire* O(log_{1+eps} n)-pass algorithm is one compiled XLA program: a
 ``lax.while_loop`` whose body contains exactly two fused collectives per pass
@@ -20,16 +27,23 @@ analogue), and the production dry-run (``--arch densest-mapreduce``).
 
 from __future__ import annotations
 
-from functools import partial
+import dataclasses
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.core.density import max_passes_bound
+from repro.core.engine import (
+    AtLeastKFraction,
+    DirectedST,
+    MeshSegmentSumBackend,
+    UndirectedThreshold,
+    run_peel,
+)
 from repro.core.peel import PeelResult
 from repro.graph.edgelist import EdgeList
 
@@ -48,6 +62,11 @@ def shard_edges(edges: EdgeList, mesh: Mesh, axes: Sequence[str]) -> EdgeList:
         n_nodes=padded.n_nodes,
         directed=padded.directed,
     )
+
+
+def _local_edges(src, dst, weight, mask, n_nodes: int) -> EdgeList:
+    """The per-device EdgeList view inside shard_map."""
+    return EdgeList(src=src, dst=dst, weight=weight, mask=mask, n_nodes=n_nodes)
 
 
 def make_distributed_peel(
@@ -72,78 +91,23 @@ def make_distributed_peel(
     (EXPERIMENTS.md Perf, densest x twitter_lg).
     """
     axes = tuple(edge_axes)
-    # Axes of the mesh that do NOT shard edges still run the same program;
-    # psum over edge axes only.
-    espec = P(axes)
-    rspec = P()
+    assert n_nodes is not None
+    n = n_nodes
+    mp = max_passes if max_passes is not None else max_passes_bound(n, eps)
+    policy = UndirectedThreshold(eps)
+    backend = MeshSegmentSumBackend(axes, wire_dtype)
 
     def peel_local(src, dst, weight, mask):
-        n = n_nodes
-        assert n is not None
-        mp = max_passes if max_passes is not None else max_passes_bound(n, eps)
-
-        def stats(alive):
-            ok = mask & alive[src] & alive[dst]
-            w_alive = jnp.where(ok, weight, 0.0)
-            deg = jax.ops.segment_sum(w_alive, src, num_segments=n)
-            deg = deg + jax.ops.segment_sum(w_alive, dst, num_segments=n)
-            # One fused reduction: [deg | total] -> psum.
-            packed = jnp.concatenate([deg, jnp.sum(w_alive)[None]])
-            if wire_dtype == "bf16":
-                packed = jax.lax.psum(packed.astype(jnp.bfloat16), axes)
-                packed = packed.astype(jnp.float32)
-            else:
-                packed = jax.lax.psum(packed, axes)
-            return packed[:-1], packed[-1]
-
-        def cond(s):
-            alive, _, _, t = s
-            return (jnp.sum(alive.astype(jnp.int32)) > 0) & (t < mp)
-
-        def body(s):
-            alive, best_alive, best_rho, t = s
-            deg, total = stats(alive)
-            n_alive = jnp.sum(alive.astype(jnp.int32))
-            rho = jnp.where(n_alive > 0, total / jnp.maximum(n_alive, 1), 0.0)
-            improved = rho > best_rho
-            best_alive = jnp.where(improved, alive, best_alive)
-            best_rho = jnp.maximum(rho, best_rho)
-            thresh = 2.0 * (1.0 + eps) * rho
-            deg_alive = jnp.where(alive, deg, jnp.inf)
-            min_deg = jnp.min(deg_alive)
-            remove = alive & ((deg <= thresh) | (deg <= min_deg))
-            return (alive & ~remove, best_alive, best_rho, t + 1)
-
-        init = (
-            jnp.ones((n,), bool),
-            jnp.ones((n,), bool),
-            jnp.asarray(-jnp.inf, jnp.float32),
-            jnp.asarray(0, jnp.int32),
-        )
-        alive, best_alive, best_rho, t = jax.lax.while_loop(cond, body, init)
-        return best_alive, best_rho, t
+        return run_peel(_local_edges(src, dst, weight, mask, n), policy, backend, mp)
 
     sharded = shard_map(
         peel_local,
         mesh=mesh,
-        in_specs=(espec, espec, espec, espec),
-        out_specs=(rspec, rspec, rspec),
+        in_specs=(P(axes),) * 4,
+        out_specs=P(),
         check_vma=False,
     )
-
-    @jax.jit
-    def run(src, dst, weight, mask) -> PeelResult:
-        best_alive, best_rho, t = sharded(src, dst, weight, mask)
-        return PeelResult(
-            best_alive=best_alive,
-            best_density=best_rho,
-            passes=t,
-            history_n=jnp.zeros((1,), jnp.int32),
-            history_m=jnp.zeros((1,), jnp.float32),
-            history_rho=jnp.zeros((1,), jnp.float32),
-        )
-
-    return run
+    return jax.jit(sharded)
 
 
 def densest_subgraph_distributed(
@@ -173,71 +137,29 @@ def make_distributed_peel_twophase(
     """Algorithm 1 with PROVABLE mid-run compaction (beyond-paper perf).
 
     Lemma 4 guarantees |S| shrinks by >= (1+eps) every pass, so after K
-    passes |S| < n/(1+eps)^K — a STATIC bound.  Phase 1 runs K passes on the
-    full id space; the survivors are then renumbered into a dense range of
-    that static size and phase 2 continues there, shrinking the per-pass
-    O(n) degree psum (the dominant collective) by (1+eps)^K for the
-    remaining O(log n) passes.  Semantics are identical to the single-phase
-    peel (compaction is pure renumbering; tested).
+    passes |S| < n/(1+eps)^K — a STATIC bound.  Phase 1 runs (up to) K
+    engine passes on the full id space; the survivors are then renumbered
+    into a dense range of that static size and phase 2 continues there,
+    shrinking the per-pass O(n) degree psum (the dominant collective) by
+    (1+eps)^K for the remaining O(log n) passes.  Semantics are identical to
+    the single-phase peel (compaction is pure renumbering; tested) — both
+    phases are the SAME engine loop, just on different id spaces.
     """
     axes = tuple(edge_axes)
-    espec = P(axes)
-    rspec = P()
     assert n_nodes is not None
     n = n_nodes
     mp = max_passes if max_passes is not None else max_passes_bound(n, eps)
     k1 = min(phase1_passes, mp)
     n2 = int(np.ceil(n / (1.0 + eps) ** k1)) + 1  # static Lemma-4 bound
     mp2 = max(mp - k1, 4)
+    policy = UndirectedThreshold(eps)
+    backend = MeshSegmentSumBackend(axes, wire_dtype)
 
     def peel_local(src, dst, weight, mask):
-        def psum_packed(packed):
-            if wire_dtype == "bf16":
-                return jax.lax.psum(packed.astype(jnp.bfloat16), axes).astype(
-                    jnp.float32
-                )
-            return jax.lax.psum(packed, axes)
-
-        def make_stats(s, d, m_, w_, nn):
-            def stats(alive):
-                ok = m_ & alive[s] & alive[d]
-                w_alive = jnp.where(ok, w_, 0.0)
-                deg = jax.ops.segment_sum(w_alive, s, num_segments=nn)
-                deg = deg + jax.ops.segment_sum(w_alive, d, num_segments=nn)
-                packed = psum_packed(
-                    jnp.concatenate([deg, jnp.sum(w_alive)[None]])
-                )
-                return packed[:-1], packed[-1]
-
-            return stats
-
-        def make_body(stats):
-            def body(s_):
-                alive, best_alive, best_rho, t = s_
-                deg, total = stats(alive)
-                n_alive = jnp.sum(alive.astype(jnp.int32))
-                rho = jnp.where(n_alive > 0, total / jnp.maximum(n_alive, 1), 0.0)
-                improved = (rho > best_rho) & (n_alive > 0)
-                best_alive = jnp.where(improved, alive, best_alive)
-                best_rho = jnp.where(improved, rho, best_rho)
-                thresh = 2.0 * (1.0 + eps) * rho
-                deg_alive = jnp.where(alive, deg, jnp.inf)
-                min_deg = jnp.min(deg_alive)
-                remove = alive & ((deg <= thresh) | (deg <= min_deg))
-                return (alive & ~remove, best_alive, best_rho, t + 1)
-
-            return body
-
-        # ---- phase 1: K fixed passes on the full id space ----
-        stats1 = make_stats(src, dst, mask, weight, n)
-        body1 = make_body(stats1)
-        init1 = (
-            jnp.ones((n,), bool), jnp.zeros((n,), bool),
-            jnp.asarray(-jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32),
-        )
-        alive1, best1, rho1, t1 = jax.lax.fori_loop(
-            0, k1, lambda _, s_: body1(s_), init1
-        )
+        # ---- phase 1: up to K passes on the full id space ----
+        edges1 = _local_edges(src, dst, weight, mask, n)
+        out1 = run_peel(edges1, policy, backend, k1, init_best_empty=True)
+        alive1 = out1.alive
 
         # ---- compaction: renumber survivors into [0, n2) ----
         n_alive1 = jnp.sum(alive1.astype(jnp.int32))
@@ -249,46 +171,90 @@ def make_distributed_peel_twophase(
         dst2 = jnp.where(ok_e, relabel[dst], trash)
         w2 = jnp.where(ok_e, weight, 0.0)
 
-        # ---- phase 2: while-loop on the compacted ids ----
-        stats2 = make_stats(src2, dst2, ok_e, w2, n2 + 1)
-        body2 = make_body(stats2)
+        # ---- phase 2: the same engine loop on the compacted ids ----
+        edges2 = _local_edges(src2, dst2, w2, ok_e, n2 + 1)
         alive2_init = jnp.arange(n2 + 1, dtype=jnp.int32) < n_alive1
-
-        def cond2(s_):
-            return (jnp.sum(s_[0].astype(jnp.int32)) > 0) & (s_[3] < mp2)
-
-        init2 = (
-            alive2_init, jnp.zeros((n2 + 1,), bool),
-            jnp.asarray(-jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32),
+        out2 = run_peel(
+            edges2, policy, backend, mp2,
+            init_alive=alive2_init, init_best_empty=True,
         )
-        alive2, best2, rho2, t2 = jax.lax.while_loop(cond2, body2, init2)
 
-        # ---- merge: map the phase-2 best set back to full ids ----
-        best2_full = alive1 & best2[jnp.minimum(relabel, n2 - 1)]
-        use2 = rho2 > rho1
-        best_alive = jnp.where(use2, best2_full, best1)
-        best_rho = jnp.maximum(rho1, rho2)
-        return best_alive, best_rho, t1 + t2
+        # ---- merge: map the phase-2 best/final sets back to full ids ----
+        best2_full = alive1 & out2.best_alive[jnp.minimum(relabel, n2 - 1)]
+        use2 = out2.best_density > out1.best_density
+        best_alive = jnp.where(use2, best2_full, out1.best_alive)
+        best_rho = jnp.maximum(out1.best_density, out2.best_density)
+        final_alive = alive1 & out2.alive[jnp.minimum(relabel, n2 - 1)]
+        return best_alive, best_rho, out1.passes + out2.passes, final_alive
 
     sharded = shard_map(
         peel_local,
         mesh=mesh,
-        in_specs=(espec, espec, espec, espec),
-        out_specs=(rspec, rspec, rspec),
+        in_specs=(P(axes),) * 4,
+        out_specs=(P(), P(), P(), P()),
         check_vma=False,
     )
 
     @jax.jit
     def run(src, dst, weight, mask) -> PeelResult:
-        best_alive, best_rho, t = sharded(src, dst, weight, mask)
+        best_alive, best_rho, t, final_alive = sharded(src, dst, weight, mask)
         return PeelResult(
-            best_alive=best_alive, best_density=best_rho, passes=t,
+            best_alive=best_alive,
+            best_t=jnp.zeros((0,), bool),
+            best_density=best_rho,
+            best_size=jnp.sum(best_alive.astype(jnp.int32)),
+            passes=t,
+            alive=final_alive,
+            t_alive=jnp.zeros((0,), bool),
             history_n=jnp.zeros((1,), jnp.int32),
             history_m=jnp.zeros((1,), jnp.float32),
             history_rho=jnp.zeros((1,), jnp.float32),
         )
 
     return run
+
+
+@dataclasses.dataclass(frozen=True)
+class _MeshSketchBackend:
+    """Count-Sketch degrees inside shard_map (paper §5.1 at §5.2 scale).
+
+    Per-pass cross-device traffic is the O(t*b) counter table (one fused
+    psum with the density counter), NOT the O(n) degree vector; the degree
+    *queries* stream over node chunks (``lax.map``) so the transient query
+    footprint stays O(node_chunk) on top of the O(n) estimate vector the
+    engine's removal rule consumes.
+    """
+
+    params: object  # SketchParams
+    axes: Tuple[str, ...]
+    node_chunk: int
+
+    def undirected(self, edges: EdgeList, w_alive: jax.Array):
+        from repro.core.countsketch import (
+            query_degrees,
+            sketch_degrees_from_edges,
+        )
+
+        t = self.params.n_tables
+        b = self.params.n_buckets
+        local = sketch_degrees_from_edges(self.params, edges, w_alive)
+        packed = jnp.concatenate([local.reshape(-1), jnp.sum(w_alive)[None]])
+        packed = jax.lax.psum(packed, self.axes)  # O(t*b) traffic, not O(n)
+        counters = packed[:-1].reshape(t, b)
+        total = packed[-1]
+
+        n = edges.n_nodes
+        n_chunks = (n + self.node_chunk - 1) // self.node_chunk
+
+        def query_chunk(ci):
+            ids = ci * self.node_chunk + jnp.arange(self.node_chunk, dtype=jnp.int32)
+            return query_degrees(self.params, counters, ids)
+
+        est = jax.lax.map(query_chunk, jnp.arange(n_chunks, dtype=jnp.int32))
+        return est.reshape(-1)[:n], total
+
+    def directed(self, edges: EdgeList, w_alive: jax.Array):
+        raise NotImplementedError("use SketchBackend for directed sketched peels")
 
 
 def make_distributed_sketched_peel(
@@ -304,108 +270,33 @@ def make_distributed_sketched_peel(
 ):
     """Distributed Algorithm 1 with Count-Sketch degrees (paper §5.1).
 
-    This is the billion-node configuration: per-pass cross-device traffic is
-    the O(t*b) counter table (psum), NOT the O(n) degree vector; node state
-    (alive/best bitmaps) stays replicated, and degree *queries* stream over
-    node chunks so peak memory is O(t*b + node_chunk) beyond the bitmaps.
+    This is the billion-node configuration: only edges are sharded, node
+    bitmaps stay replicated, and the per-pass collective is the O(t*b)
+    counter psum.  Returns fn(src, dst, weight, mask) ->
+    (best_alive, best_rho, passes).
     """
-    from repro.core.countsketch import (
-        _hash_bucket,
-        _hash_sign,
-        make_sketch_params,
-    )
+    from repro.core.countsketch import make_sketch_params
 
     axes = tuple(edge_axes)
-    espec = P(axes)
-    rspec = P()
-    sketch = make_sketch_params(t, b, seed)
     assert n_nodes is not None
     n = n_nodes
-    n_pad = ((n + node_chunk - 1) // node_chunk) * node_chunk
-    n_chunks = n_pad // node_chunk
+    policy = UndirectedThreshold(eps)
+    backend = _MeshSketchBackend(
+        params=make_sketch_params(t, b, seed), axes=axes,
+        node_chunk=min(node_chunk, max(n, 1)),
+    )
 
     def peel_local(src, dst, weight, mask):
-        def counters_of(alive):
-            ok = mask & alive[src] & alive[dst]
-            w = jnp.where(ok, weight, 0.0)
-
-            def accumulate(x):
-                buckets = _hash_bucket(sketch, x)  # [t, E]
-                signs = _hash_sign(sketch, x)
-                flat = (
-                    buckets + (jnp.arange(t, dtype=jnp.int32) * b)[:, None]
-                ).reshape(-1)
-                vals = (signs * w[None, :]).reshape(-1)
-                return jax.ops.segment_sum(vals, flat, num_segments=t * b)
-
-            local = accumulate(src) + accumulate(dst)
-            packed = jnp.concatenate([local, jnp.sum(w)[None]])
-            packed = jax.lax.psum(packed, axes)  # O(t*b) traffic, not O(n)
-            return packed[:-1].reshape(t, b), packed[-1]
-
-        def est_chunk(counters, chunk_idx):
-            ids = chunk_idx * node_chunk + jnp.arange(node_chunk, dtype=jnp.int32)
-            buckets = _hash_bucket(sketch, ids)  # [t, C]
-            signs = _hash_sign(sketch, ids)
-            est = jnp.take_along_axis(counters, buckets, axis=1) * signs
-            return jnp.median(est, axis=0), ids
-
-        def cond(s):
-            alive, _, _, tt = s
-            return (jnp.sum(alive.astype(jnp.int64)) > 0) & (tt < max_passes)
-
-        def body(s):
-            alive, best_alive, best_rho, tt = s
-            counters, total = counters_of(alive)
-            n_alive = jnp.sum(alive.astype(jnp.int64)).astype(jnp.float32)
-            rho = jnp.where(n_alive > 0, total / jnp.maximum(n_alive, 1.0), 0.0)
-            improved = rho > best_rho
-            best_alive = jnp.where(improved, alive, best_alive)
-            best_rho = jnp.maximum(rho, best_rho)
-            thresh = 2.0 * (1.0 + eps) * rho
-
-            # Pass 1 over node chunks: global min estimated degree (progress
-            # fallback).  Pass 2: threshold removal.
-            def min_body(carry, ci):
-                counters_ = counters
-                est, ids = est_chunk(counters_, ci)
-                ok = (ids < n) & alive[jnp.minimum(ids, n - 1)]
-                est = jnp.where(ok, est, jnp.inf)
-                return jnp.minimum(carry, jnp.min(est)), None
-
-            min_deg, _ = jax.lax.scan(
-                min_body, jnp.asarray(jnp.inf, jnp.float32),
-                jnp.arange(n_chunks, dtype=jnp.int32),
-            )
-
-            def rm_body(alive_c, ci):
-                est, ids = est_chunk(counters, ci)
-                idsc = jnp.minimum(ids, n - 1)
-                was = alive_c[idsc] & (ids < n)
-                remove = was & ((est <= thresh) | (est <= min_deg))
-                return alive_c.at[idsc].set(
-                    jnp.where(ids < n, was & ~remove, alive_c[idsc])
-                ), None
-
-            alive, _ = jax.lax.scan(
-                rm_body, alive, jnp.arange(n_chunks, dtype=jnp.int32)
-            )
-            return (alive, best_alive, best_rho, tt + 1)
-
-        init = (
-            jnp.ones((n,), bool),
-            jnp.ones((n,), bool),
-            jnp.asarray(-jnp.inf, jnp.float32),
-            jnp.asarray(0, jnp.int32),
+        out = run_peel(
+            _local_edges(src, dst, weight, mask, n), policy, backend, max_passes
         )
-        alive, best_alive, best_rho, tt = jax.lax.while_loop(cond, body, init)
-        return best_alive, best_rho, tt
+        return out.best_alive, out.best_density, out.passes
 
     sharded = shard_map(
         peel_local,
         mesh=mesh,
-        in_specs=(espec, espec, espec, espec),
-        out_specs=(rspec, rspec, rspec),
+        in_specs=(P(axes),) * 4,
+        out_specs=(P(), P(), P()),
         check_vma=False,
     )
     return jax.jit(sharded)
@@ -428,80 +319,23 @@ def make_distributed_topk_peel(
     no extra collective beyond Algorithm 1's.
     """
     axes = tuple(edge_axes)
-    espec = P(axes)
-    rspec = P()
     assert n_nodes is not None
     n = n_nodes
     mp = max_passes if max_passes is not None else max_passes_bound(n, eps)
+    policy = AtLeastKFraction(k=k, eps=eps, min_deg_fallback=False, ceil_count=True)
+    backend = MeshSegmentSumBackend(axes)
 
     def peel_local(src, dst, weight, mask):
-        def stats(alive):
-            ok = mask & alive[src] & alive[dst]
-            w_alive = jnp.where(ok, weight, 0.0)
-            deg = jax.ops.segment_sum(w_alive, src, num_segments=n)
-            deg = deg + jax.ops.segment_sum(w_alive, dst, num_segments=n)
-            packed = jax.lax.psum(
-                jnp.concatenate([deg, jnp.sum(w_alive)[None]]), axes
-            )
-            return packed[:-1], packed[-1]
-
-        def cond(s):
-            alive, _, _, t = s
-            return (jnp.sum(alive.astype(jnp.int32)) >= k) & (t < mp)
-
-        def body(s):
-            alive, best_alive, best_rho, t = s
-            deg, total = stats(alive)
-            n_alive = jnp.sum(alive.astype(jnp.int32))
-            rho = jnp.where(n_alive > 0, total / jnp.maximum(n_alive, 1), 0.0)
-            improved = (rho > best_rho) & (n_alive >= k)
-            best_alive = jnp.where(improved, alive, best_alive)
-            best_rho = jnp.where(improved, rho, best_rho)
-            # A~(S): threshold-eligible; remove the ceil(eps/(1+eps)|S|)
-            # lowest-degree of them (ranked by degree, ties by id).
-            thresh = 2.0 * (1.0 + eps) * rho
-            n_rm = jnp.ceil(
-                n_alive.astype(jnp.float32) * eps / (1.0 + eps)
-            ).astype(jnp.int32)
-            n_rm = jnp.maximum(n_rm, 1)
-            eligible = alive & (deg <= thresh)
-            # rank within eligible set: sort (deg, id) ascending
-            big = jnp.asarray(jnp.inf, jnp.float32)
-            key = jnp.where(eligible, deg, big)
-            order = jnp.argsort(key)  # eligible first, by degree
-            rank = jnp.zeros((n,), jnp.int32).at[order].set(
-                jnp.arange(n, dtype=jnp.int32)
-            )
-            n_eligible = jnp.sum(eligible.astype(jnp.int32))
-            remove = eligible & (rank < jnp.minimum(n_rm, n_eligible))
-            return (alive & ~remove, best_alive, best_rho, t + 1)
-
-        init = (
-            jnp.ones((n,), bool), jnp.ones((n,), bool),
-            jnp.asarray(-jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32),
-        )
-        alive, best_alive, best_rho, t = jax.lax.while_loop(cond, body, init)
-        return best_alive, best_rho, t
+        return run_peel(_local_edges(src, dst, weight, mask, n), policy, backend, mp)
 
     sharded = shard_map(
         peel_local,
         mesh=mesh,
-        in_specs=(espec, espec, espec, espec),
-        out_specs=(rspec, rspec, rspec),
+        in_specs=(P(axes),) * 4,
+        out_specs=P(),
         check_vma=False,
     )
-
-    @jax.jit
-    def run(src, dst, weight, mask) -> PeelResult:
-        best_alive, best_rho, t = sharded(src, dst, weight, mask)
-        return PeelResult(
-            best_alive=best_alive, best_density=best_rho, passes=t,
-            history_n=jnp.zeros((1,), jnp.int32),
-            history_m=jnp.zeros((1,), jnp.float32),
-            history_rho=jnp.zeros((1,), jnp.float32),
-        )
-
-    return run
+    return jax.jit(sharded)
 
 
 def make_distributed_directed_peel(
@@ -511,68 +345,26 @@ def make_distributed_directed_peel(
     max_passes: Optional[int] = None,
     n_nodes: Optional[int] = None,
 ):
-    """Distributed Algorithm 3 (directed) for a traced ratio c."""
+    """Distributed Algorithm 3 (directed) for a traced ratio c.
+
+    Returns fn(src, dst, weight, mask, c) -> (best_s, best_t, rho, passes).
+    """
     axes = tuple(edge_axes)
-    espec = P(axes)
-    rspec = P()
+    assert n_nodes is not None
+    n = n_nodes
+    mp = max_passes if max_passes is not None else 2 * max_passes_bound(n, eps)
+    backend = MeshSegmentSumBackend(axes)
 
     def peel_local(src, dst, weight, mask, c):
-        n = n_nodes
-        assert n is not None
-        mp = max_passes if max_passes is not None else 2 * max_passes_bound(n, eps)
-
-        def stats(s_alive, t_alive):
-            ok = mask & s_alive[src] & t_alive[dst]
-            w = jnp.where(ok, weight, 0.0)
-            out_deg = jax.ops.segment_sum(w, src, num_segments=n)
-            in_deg = jax.ops.segment_sum(w, dst, num_segments=n)
-            packed = jnp.concatenate([out_deg, in_deg, jnp.sum(w)[None]])
-            packed = jax.lax.psum(packed, axes)
-            return packed[:n], packed[n : 2 * n], packed[-1]
-
-        def cond(s):
-            s_alive, t_alive = s[0], s[1]
-            return (
-                (jnp.sum(s_alive.astype(jnp.int32)) > 0)
-                & (jnp.sum(t_alive.astype(jnp.int32)) > 0)
-                & (s[5] < mp)
-            )
-
-        def body(s):
-            s_alive, t_alive, best_s, best_t, best_rho, t = s
-            out_deg, in_deg, total = stats(s_alive, t_alive)
-            ns = jnp.sum(s_alive.astype(jnp.int32))
-            nt = jnp.sum(t_alive.astype(jnp.int32))
-            ns_f = jnp.maximum(ns.astype(jnp.float32), 1.0)
-            nt_f = jnp.maximum(nt.astype(jnp.float32), 1.0)
-            rho = jnp.where(
-                (ns > 0) & (nt > 0), total / jnp.sqrt(ns_f * nt_f), 0.0
-            )
-            improved = rho > best_rho
-            best_s = jnp.where(improved, s_alive, best_s)
-            best_t = jnp.where(improved, t_alive, best_t)
-            best_rho = jnp.maximum(rho, best_rho)
-            peel_s = ns_f / nt_f >= c
-            thr_s = (1.0 + eps) * total / ns_f
-            outd = jnp.where(s_alive, out_deg, jnp.inf)
-            rm_s = s_alive & ((out_deg <= thr_s) | (out_deg <= jnp.min(outd)))
-            thr_t = (1.0 + eps) * total / nt_f
-            ind = jnp.where(t_alive, in_deg, jnp.inf)
-            rm_t = t_alive & ((in_deg <= thr_t) | (in_deg <= jnp.min(ind)))
-            s_alive = jnp.where(peel_s, s_alive & ~rm_s, s_alive)
-            t_alive = jnp.where(peel_s, t_alive, t_alive & ~rm_t)
-            return (s_alive, t_alive, best_s, best_t, best_rho, t + 1)
-
-        ones = jnp.ones((n,), bool)
-        init = (ones, ones, ones, ones, jnp.asarray(-jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32))
-        out = jax.lax.while_loop(cond, body, init)
-        return out[2], out[3], out[4], out[5]
+        policy = DirectedST(eps=eps, c=c)
+        out = run_peel(_local_edges(src, dst, weight, mask, n), policy, backend, mp)
+        return out.best_alive, out.best_t, out.best_density, out.passes
 
     sharded = shard_map(
         peel_local,
         mesh=mesh,
-        in_specs=(espec, espec, espec, espec, rspec),
-        out_specs=(rspec, rspec, rspec, rspec),
+        in_specs=(P(axes),) * 4 + (P(),),
+        out_specs=(P(), P(), P(), P()),
         check_vma=False,
     )
     return jax.jit(sharded)

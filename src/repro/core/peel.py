@@ -1,9 +1,10 @@
 """Algorithm 1 — (2+2eps)-approximate densest subgraph for undirected graphs.
 
-The whole O(log_{1+eps} n)-pass algorithm compiles to a single
-``jax.lax.while_loop``: each iteration is one streaming/MapReduce pass of the
-paper (degree count + density + threshold removal).  A ``degree_fn`` hook lets
-the Count-Sketch variant (§5.1) reuse the identical loop.
+Thin wrapper over the PeelEngine (core/engine.py): Algorithm 1 is the
+``UndirectedThreshold`` policy on the exact segment-sum backend, jitted as a
+single ``lax.while_loop`` program.  A ``degree_fn`` hook lets the
+Count-Sketch (§5.1) and Pallas tiled-degree backends reuse the identical
+loop via :class:`repro.core.engine.FnBackend`.
 
 The removal rule adds one safeguard on top of the paper's: when floating-point
 rounding would make ``A(S)`` empty (mathematically impossible since the
@@ -14,39 +15,23 @@ has deg_S(i) <= 2(1+eps) rho(S)) and guarantees progress.
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.density import (
-    alive_edge_weight,
-    exact_degrees,
-    max_passes_bound,
+from repro.core.density import exact_degrees, max_passes_bound
+from repro.core.engine import (
+    FnBackend,
+    PeelOutcome,
+    UndirectedThreshold,
+    run_peel,
 )
 from repro.graph.edgelist import EdgeList
 
-
-class PeelResult(NamedTuple):
-    best_alive: jax.Array  # bool[N] the output subgraph S~
-    best_density: jax.Array  # float32[] rho(S~)
-    passes: jax.Array  # int32[] number of while-loop passes executed
-    # Per-pass trajectory (for Fig 6.2/6.3-style analyses); padded with -1/0.
-    history_n: jax.Array  # int32[max_passes]
-    history_m: jax.Array  # float32[max_passes]
-    history_rho: jax.Array  # float32[max_passes]
-
-
-class _State(NamedTuple):
-    alive: jax.Array
-    best_alive: jax.Array
-    best_rho: jax.Array
-    t: jax.Array
-    history_n: jax.Array
-    history_m: jax.Array
-    history_rho: jax.Array
+# The engine outcome IS the public result type (best_alive, best_density,
+# passes, history_*) — kept under the historical name.
+PeelResult = PeelOutcome
 
 
 def _default_degree_fn(edges: EdgeList, w_alive: jax.Array) -> jax.Array:
@@ -62,62 +47,14 @@ def densest_subgraph(
     track_history: bool = True,
 ) -> PeelResult:
     """Runs Algorithm 1 and returns the best intermediate subgraph."""
-    n = edges.n_nodes
     if max_passes is None:
-        max_passes = max_passes_bound(n, eps)
-    hist_len = max_passes if track_history else 1
-
-    def loop_stats(alive):
-        w_alive = alive_edge_weight(edges, alive)
-        deg = degree_fn(edges, w_alive)
-        total = jnp.sum(w_alive)
-        n_alive = jnp.sum(alive.astype(jnp.int32))
-        rho = jnp.where(n_alive > 0, total / jnp.maximum(n_alive, 1), 0.0)
-        return deg, total, n_alive, rho
-
-    def cond(s: _State):
-        return (jnp.sum(s.alive.astype(jnp.int32)) > 0) & (s.t < max_passes)
-
-    def body(s: _State) -> _State:
-        deg, total, n_alive, rho = loop_stats(s.alive)
-        # Track the best set seen so far (each intermediate S is evaluated
-        # when it becomes current; S_0 = V is evaluated at t=0).
-        improved = rho > s.best_rho
-        best_alive = jnp.where(improved, s.alive, s.best_alive)
-        best_rho = jnp.maximum(rho, s.best_rho)
-
-        thresh = 2.0 * (1.0 + eps) * rho
-        # Exact degrees are float; use the min-degree fallback for progress.
-        deg_alive = jnp.where(s.alive, deg, jnp.inf)
-        min_deg = jnp.min(deg_alive)
-        remove = s.alive & ((deg <= thresh) | (deg <= min_deg))
-        alive = s.alive & ~remove
-
-        if track_history:
-            hn = s.history_n.at[s.t].set(n_alive)
-            hm = s.history_m.at[s.t].set(total)
-            hr = s.history_rho.at[s.t].set(rho)
-        else:
-            hn, hm, hr = s.history_n, s.history_m, s.history_rho
-        return _State(alive, best_alive, best_rho, s.t + 1, hn, hm, hr)
-
-    init = _State(
-        alive=jnp.ones((n,), bool) ,
-        best_alive=jnp.ones((n,), bool),
-        best_rho=jnp.asarray(-jnp.inf, jnp.float32),
-        t=jnp.asarray(0, jnp.int32),
-        history_n=jnp.full((hist_len,), -1, jnp.int32),
-        history_m=jnp.zeros((hist_len,), jnp.float32),
-        history_rho=jnp.zeros((hist_len,), jnp.float32),
-    )
-    out = jax.lax.while_loop(cond, body, init)
-    return PeelResult(
-        best_alive=out.best_alive,
-        best_density=out.best_rho,
-        passes=out.t,
-        history_n=out.history_n,
-        history_m=out.history_m,
-        history_rho=out.history_rho,
+        max_passes = max_passes_bound(edges.n_nodes, eps)
+    return run_peel(
+        edges,
+        UndirectedThreshold(eps),
+        FnBackend(degree_fn),
+        max_passes,
+        track_history=track_history,
     )
 
 

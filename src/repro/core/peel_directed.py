@@ -1,40 +1,29 @@
 """Algorithm 3 — (2+2eps)-approximate densest subgraph for directed graphs.
 
-For a fixed ratio guess c = |S|/|T|, the algorithm alternates: when
-|S|/|T| >= c it peels S by out-degree into T, otherwise peels T by in-degree
-from S (the paper's simplified size-based choice, §4.3).  A geometric grid of
-c values (resolution delta) costs at most an extra delta factor in the
-approximation (§6.4); ``densest_directed_search`` runs the grid.
+Thin wrapper over the PeelEngine: the ``DirectedST`` policy (dual S/T
+bitmaps; when |S|/|T| >= c it peels S by out-degree into T, otherwise peels
+T by in-degree from S — the paper's simplified size-based choice, §4.3) on
+the exact backend.  A geometric grid of c values (resolution delta) costs at
+most an extra delta factor in the approximation (§6.4);
+``densest_directed_search`` runs the grid, and because c enters the policy
+as a traced scalar the whole grid also batches under ``vmap``.
 """
 
 from __future__ import annotations
 
 import math
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.density import directed_stats, max_passes_bound
+from repro.core.density import max_passes_bound
+from repro.core.engine import DirectedST, ExactBackend, PeelOutcome, run_peel
 from repro.graph.edgelist import EdgeList
 
-
-class DirectedPeelResult(NamedTuple):
-    best_s: jax.Array  # bool[N]
-    best_t: jax.Array  # bool[N]
-    best_density: jax.Array
-    passes: jax.Array
-
-
-class _State(NamedTuple):
-    s_alive: jax.Array
-    t_alive: jax.Array
-    best_s: jax.Array
-    best_t: jax.Array
-    best_rho: jax.Array
-    t: jax.Array
+DirectedPeelResult = PeelOutcome  # best_s / best_t / best_density / passes
 
 
 @partial(jax.jit, static_argnames=("eps", "max_passes"))
@@ -45,53 +34,11 @@ def densest_subgraph_directed(
     max_passes: Optional[int] = None,
 ) -> DirectedPeelResult:
     """Algorithm 3 for one value of c (c may be a traced scalar)."""
-    n = edges.n_nodes
     if max_passes is None:
         # Either |S| or |T| shrinks by 1/(1+eps) per pass (Lemma 13).
-        max_passes = 2 * max_passes_bound(n, eps)
-    c = jnp.asarray(c, jnp.float32)
-
-    def cond(s: _State):
-        ns = jnp.sum(s.s_alive.astype(jnp.int32))
-        nt = jnp.sum(s.t_alive.astype(jnp.int32))
-        return (ns > 0) & (nt > 0) & (s.t < max_passes)
-
-    def body(s: _State) -> _State:
-        st = directed_stats(edges, s.s_alive, s.t_alive)
-        improved = st.density > s.best_rho
-        best_s = jnp.where(improved, s.s_alive, s.best_s)
-        best_t = jnp.where(improved, s.t_alive, s.best_t)
-        best_rho = jnp.maximum(st.density, s.best_rho)
-
-        ns_f = jnp.maximum(st.n_s.astype(jnp.float32), 1.0)
-        nt_f = jnp.maximum(st.n_t.astype(jnp.float32), 1.0)
-        peel_s = ns_f / nt_f >= c
-
-        # Peel S by out-degree (with min-degree progress fallback).
-        thr_s = (1.0 + eps) * st.total_weight / ns_f
-        outd = jnp.where(s.s_alive, st.out_deg, jnp.inf)
-        min_out = jnp.min(outd)
-        rm_s = s.s_alive & ((st.out_deg <= thr_s) | (st.out_deg <= min_out))
-        # Peel T by in-degree.
-        thr_t = (1.0 + eps) * st.total_weight / nt_f
-        ind = jnp.where(s.t_alive, st.in_deg, jnp.inf)
-        min_in = jnp.min(ind)
-        rm_t = s.t_alive & ((st.in_deg <= thr_t) | (st.in_deg <= min_in))
-
-        s_alive = jnp.where(peel_s, s.s_alive & ~rm_s, s.s_alive)
-        t_alive = jnp.where(peel_s, s.t_alive, s.t_alive & ~rm_t)
-        return _State(s_alive, t_alive, best_s, best_t, best_rho, s.t + 1)
-
-    init = _State(
-        s_alive=jnp.ones((n,), bool),
-        t_alive=jnp.ones((n,), bool),
-        best_s=jnp.ones((n,), bool),
-        best_t=jnp.ones((n,), bool),
-        best_rho=jnp.asarray(-jnp.inf, jnp.float32),
-        t=jnp.asarray(0, jnp.int32),
-    )
-    out = jax.lax.while_loop(cond, body, init)
-    return DirectedPeelResult(out.best_s, out.best_t, out.best_rho, out.t)
+        max_passes = 2 * max_passes_bound(edges.n_nodes, eps)
+    policy = DirectedST(eps=eps, c=jnp.asarray(c, jnp.float32))
+    return run_peel(edges, policy, ExactBackend(), max_passes)
 
 
 def c_grid(n_nodes: int, delta: float = 2.0) -> np.ndarray:

@@ -1,38 +1,30 @@
 """Algorithm 2 — (3+3eps)-approximate densest subgraph of size >= k.
 
-Difference from Algorithm 1 (per the paper): instead of removing *all* nodes
-below the 2(1+eps) rho(S) threshold, remove only |A(S)| = eps/(1+eps) |S| of
-them (the lowest-degree ones, a deterministic choice of the subset the paper
-leaves free).  Inequality (4.2) guarantees the candidate set is large enough.
-Only sets with |S| >= k are eligible as the answer; the loop stops once
+Thin wrapper over the PeelEngine: the ``AtLeastKFraction`` policy (remove
+only |A(S)| = eps/(1+eps) |S| lowest-degree candidates per pass, a
+deterministic choice of the subset the paper leaves free) on the exact
+backend.  Inequality (4.2) guarantees the candidate set is large enough;
+only sets with |S| >= k are eligible as the answer and the loop stops once
 |S| < k (Lemma 11).
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.density import alive_edge_weight, exact_degrees, max_passes_bound
+from repro.core.density import max_passes_bound
+from repro.core.engine import (
+    AtLeastKFraction,
+    ExactBackend,
+    PeelOutcome,
+    run_peel,
+)
 from repro.graph.edgelist import EdgeList
 
-
-class PeelTopKResult(NamedTuple):
-    best_alive: jax.Array
-    best_density: jax.Array
-    best_size: jax.Array
-    passes: jax.Array
-
-
-class _State(NamedTuple):
-    alive: jax.Array
-    best_alive: jax.Array
-    best_rho: jax.Array
-    best_size: jax.Array
-    t: jax.Array
+PeelTopKResult = PeelOutcome  # best_alive / best_density / best_size / passes
 
 
 @partial(jax.jit, static_argnames=("k", "eps", "max_passes"))
@@ -42,48 +34,8 @@ def densest_subgraph_at_least_k(
     eps: float = 0.5,
     max_passes: Optional[int] = None,
 ) -> PeelTopKResult:
-    n = edges.n_nodes
     if max_passes is None:
-        max_passes = max_passes_bound(n, eps)
-    frac = eps / (1.0 + eps)
-
-    def cond(s: _State):
-        return (jnp.sum(s.alive.astype(jnp.int32)) >= k) & (s.t < max_passes)
-
-    def body(s: _State) -> _State:
-        w_alive = alive_edge_weight(edges, s.alive)
-        deg = exact_degrees(edges, w_alive)
-        total = jnp.sum(w_alive)
-        n_alive = jnp.sum(s.alive.astype(jnp.int32))
-        rho = jnp.where(n_alive > 0, total / jnp.maximum(n_alive, 1), 0.0)
-
-        eligible = n_alive >= k
-        improved = eligible & (rho > s.best_rho)
-        best_alive = jnp.where(improved, s.alive, s.best_alive)
-        best_rho = jnp.where(improved, rho, s.best_rho)
-        best_size = jnp.where(improved, n_alive, s.best_size)
-
-        # Candidate set A~(S): below-threshold nodes; remove exactly
-        # r = max(1, floor(frac * |S|)) of the lowest-degree ones.
-        thresh = 2.0 * (1.0 + eps) * rho
-        deg_alive = jnp.where(s.alive, deg, jnp.inf)
-        min_deg = jnp.min(deg_alive)
-        cand = s.alive & ((deg <= thresh) | (deg <= min_deg))
-        r = jnp.maximum((frac * n_alive.astype(jnp.float32)).astype(jnp.int32), 1)
-        # Rank alive candidate nodes by degree (stable => ties by node id).
-        key = jnp.where(cand, deg, jnp.inf)
-        order = jnp.argsort(key)  # stable
-        rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
-        remove = cand & (rank < r)
-        alive = s.alive & ~remove
-        return _State(alive, best_alive, best_rho, best_size, s.t + 1)
-
-    init = _State(
-        alive=jnp.ones((n,), bool),
-        best_alive=jnp.ones((n,), bool),
-        best_rho=jnp.asarray(-jnp.inf, jnp.float32),
-        best_size=jnp.asarray(0, jnp.int32),
-        t=jnp.asarray(0, jnp.int32),
+        max_passes = max_passes_bound(edges.n_nodes, eps)
+    return run_peel(
+        edges, AtLeastKFraction(k=k, eps=eps), ExactBackend(), max_passes
     )
-    out = jax.lax.while_loop(cond, body, init)
-    return PeelTopKResult(out.best_alive, out.best_rho, out.best_size, out.t)

@@ -85,23 +85,34 @@ class StreamingDensest:
         return os.path.join(self.checkpoint_dir, "stream_state.npz")
 
     def _save(self, st: StreamState) -> None:
+        """Atomic checkpoint write: savez to a temp file, fsync, then
+        ``os.replace`` — a crash at any point leaves either the old or the
+        new checkpoint, never a torn one.  The temp file is removed on
+        failure as well."""
         path = self._ckpt_path()
         if path is None:
             return
         os.makedirs(self.checkpoint_dir, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=self.checkpoint_dir, suffix=".tmp")
-        os.close(fd)
-        np.savez(
-            tmp,
-            alive=st.alive,
-            best_alive=st.best_alive,
-            best_rho=np.float64(st.best_rho),
-            pass_idx=np.int64(st.pass_idx),
-            history=np.asarray(st.history, np.float64).reshape(-1, 3),
-        )
-        # numpy appends .npz to the filename it writes.
-        os.replace(tmp + ".npz", path)
-        os.unlink(tmp) if os.path.exists(tmp) else None
+        fd, tmp = tempfile.mkstemp(dir=self.checkpoint_dir, suffix=".npz.tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(
+                    f,
+                    alive=st.alive,
+                    best_alive=st.best_alive,
+                    best_rho=np.float64(st.best_rho),
+                    pass_idx=np.int64(st.pass_idx),
+                    history=np.asarray(st.history, np.float64).reshape(-1, 3),
+                )
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     def _load(self) -> Optional[StreamState]:
         path = self._ckpt_path()
@@ -185,19 +196,23 @@ class StreamingDensest:
         if max_passes is None:
             max_passes = max_passes_bound(self.n_nodes, self.eps)
 
+        from repro.core.engine import undirected_pass_step
+
         while st.alive.any() and st.pass_idx < max_passes:
             deg, total = self._pass_stats(st.alive)
             n_alive = int(st.alive.sum())
-            rho = total / max(n_alive, 1)
+            # The threshold/removal rule is the engine's UndirectedThreshold
+            # policy step — the streaming driver only supplies the chunked
+            # degree accumulation around it.
+            new_alive, rho_arr = undirected_pass_step(
+                jnp.asarray(st.alive), jnp.asarray(deg), float(total), self.eps
+            )
+            rho = float(rho_arr)
             st.history.append((n_alive, total, rho))
             if rho > st.best_rho:
                 st.best_rho = rho
                 st.best_alive = st.alive.copy()
-            thresh = 2.0 * (1.0 + self.eps) * rho
-            deg_alive = np.where(st.alive, deg, np.inf)
-            min_deg = deg_alive.min()
-            remove = st.alive & ((deg <= thresh) | (deg <= min_deg))
-            st.alive = st.alive & ~remove
+            st.alive = np.asarray(new_alive)
             st.pass_idx += 1
             self._save(st)
         return st

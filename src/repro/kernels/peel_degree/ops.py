@@ -60,6 +60,14 @@ def degree_fn_from_tiling(tiled: TiledEdges, use_pallas: bool = True):
     return fn
 
 
+def degree_backend_from_tiling(tiled: TiledEdges, use_pallas: bool = True):
+    """Engine ``DegreeBackend`` wrapping the Pallas tiled-degree kernel, for
+    use with :func:`repro.core.engine.run_peel` (undirected policies)."""
+    from repro.core.engine import FnBackend
+
+    return FnBackend(degree_fn_from_tiling(tiled, use_pallas=use_pallas))
+
+
 def tiling_for_edges(edges: EdgeList, tile_size: int = 1024, block: int = 512):
     """Buckets ALL edge slots (padding included): ``edge_index`` must address
     the original edge array because the per-pass ``w_alive`` is indexed over

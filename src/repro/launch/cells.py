@@ -364,7 +364,31 @@ def _densest_cell(spec, shape, mesh, rules, overrides):
         "weight": jax.ShapeDtypeStruct((m_pad,), jnp.float32, sharding=_named(mesh, espec)),
         "mask": jax.ShapeDtypeStruct((m_pad,), jnp.bool_, sharding=_named(mesh, espec)),
     }
-    if shape.kind == "peel_sketched" or overrides.get("use_sketch"):
+    # Every branch below is the same PeelEngine loop (core/engine.py) under
+    # shard_map; the override picks the policy / degree backend combination.
+    policy = overrides.get("policy", "undirected")
+    wants_sketch = shape.kind == "peel_sketched" or overrides.get("use_sketch")
+    if policy != "undirected" and wants_sketch:
+        raise ValueError(
+            f"policy={policy!r} has no distributed Count-Sketch builder yet; "
+            "drop the sketch config or use policy='undirected'"
+        )
+    if policy == "topk":
+        from repro.core.mapreduce import make_distributed_topk_peel
+
+        fn = make_distributed_topk_peel(
+            mesh, edge_axes, k=int(overrides.get("k", 2)), eps=eps,
+            max_passes=max_passes, n_nodes=n,
+        )
+    elif policy == "directed":
+        from repro.core.mapreduce import make_distributed_directed_peel
+
+        dfn = make_distributed_directed_peel(
+            mesh, edge_axes, eps=eps, max_passes=max_passes, n_nodes=n
+        )
+        c = float(overrides.get("c", 1.0))
+        fn = lambda src, dst, weight, mask: dfn(src, dst, weight, mask, c)
+    elif shape.kind == "peel_sketched" or overrides.get("use_sketch"):
         fn = make_distributed_sketched_peel(
             mesh, edge_axes, eps=eps, max_passes=max_passes, n_nodes=n,
             t=p.get("t", overrides.get("t", 5)),
