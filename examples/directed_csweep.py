@@ -3,14 +3,15 @@
     PYTHONPATH=src python examples/directed_csweep.py
 
 Builds a directed graph with a planted S->T dense block (|S|/|T| = 2.5) and
-sweeps c = |S|/|T| guesses at delta=2, printing the Fig 6.4-style profile.
-The best c should land near the planted ratio and recover the planted sets.
+solves ``Problem.directed()`` — c=None means "sweep the c grid"; the whole
+profile comes back in ``result.extras`` and every c reuses ONE compiled
+program.  The best c should land near the planted ratio and recover the
+planted sets.
 """
 
 import numpy as np
 
-from repro.core import densest_directed_search
-from repro.core.peel_directed import c_grid, densest_subgraph_directed
+from repro.core import Problem, solve
 from repro.graph.generators import directed_planted
 
 
@@ -22,16 +23,19 @@ def main():
     print(f"graph: n={edges.n_nodes} m={int(edges.num_real_edges())} "
           f"planted |S|={ks} |T|={kt} (c* = {ks / kt:.2f})")
 
-    best, best_c, rhos, passes = densest_directed_search(edges, eps=0.5, delta=2.0)
-    grid = c_grid(edges.n_nodes, 2.0)
+    best = solve(edges, Problem.directed(eps=0.5, c_delta=2.0))
+    best_c = best.extras["best_c"]
+    grid = best.extras["c_grid"]
+    rhos = best.extras["c_density"]
+    passes = best.extras["c_passes"]
     for c, rho, p in zip(grid, rhos, passes):
         bar = "#" * int(40 * rho / max(rhos.max(), 1e-9))
         marker = "  <== best" if abs(c - best_c) < 1e-9 else ""
         if 0.01 <= c <= 100:
             print(f"c={c:9.3f} rho={rho:8.3f} passes={p:2d} {bar}{marker}")
 
-    s_found = np.nonzero(np.asarray(best.best_s))[0]
-    t_found = np.nonzero(np.asarray(best.best_t))[0]
+    s_found = best.nodes()
+    t_found = best.t_nodes()
     s_rec = len(np.intersect1d(s_found, s_ids)) / ks
     t_rec = len(np.intersect1d(t_found, t_ids)) / kt
     print(

@@ -1,10 +1,14 @@
 """The PeelEngine policy × backend matrix on one graph.
 
 Every cell below is the SAME pass body (core/engine.py run_peel): only the
-removal policy and the degree backend change.  Run with::
+removal policy and the degree backend change.  The front door reaches the
+same cells declaratively — ``solve(edges, Problem(objective=..., backend=...))``
+— and the closing lines prove it on one cell.  Run with::
 
-    PYTHONPATH=src python examples/engine_matrix.py
+    PYTHONPATH=src python examples/engine_matrix.py [--n 1000]
 """
+
+import argparse
 
 import numpy as np
 
@@ -23,13 +27,18 @@ from repro.core.engine import (
 from repro.graph.generators import directed_planted, planted_dense_subgraph
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1000)
+    args = ap.parse_args(argv)
+
     eps, mp = 0.5, 64
+    n = args.n
     edges, planted = planted_dense_subgraph(
-        1000, avg_deg=4, k=40, p_dense=0.8, seed=0
+        n, avg_deg=4, k=max(10, n // 25), p_dense=0.8, seed=0
     )
     dedges, _, _ = directed_planted(
-        1000, avg_deg=3, ks=30, kt=25, p_dense=0.9, seed=0
+        n, avg_deg=3, ks=max(8, n // 33), kt=max(6, n // 40), p_dense=0.9, seed=0
     )
     _, rho_star = densest_subgraph_exact(edges)
     print(f"undirected n={edges.n_nodes} planted k={len(planted)} rho*={rho_star:.3f}")
@@ -60,6 +69,19 @@ def main():
                 f"{pname:<22} {bname:<8} {float(res.best_density):8.3f} "
                 f"{int(res.best_size):6d} {int(res.passes):7d}"
             )
+
+    # The declarative route to the same cell (front door, core/api.py).
+    from repro.core import Problem, solve
+
+    front = solve(edges, Problem.undirected(eps=eps, max_passes=mp))
+    direct = jax.jit(
+        lambda e: run_peel(e, UndirectedThreshold(eps), ExactBackend(), mp)
+    )(edges)
+    assert np.array_equal(np.asarray(front.best_alive), np.asarray(direct.best_alive))
+    print(
+        f"\nsolve(Problem.undirected(eps={eps})) == engine cell "
+        f"[{front.provenance.policy} x {front.provenance.backend}] ✓"
+    )
 
 
 if __name__ == "__main__":

@@ -28,15 +28,12 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import (
+    Problem,
     StreamingDensest,
     chunked_from_arrays,
-    densest_subgraph_sketched,
+    solve,
 )
-from repro.core.mapreduce import (
-    densest_subgraph_distributed,
-    make_distributed_peel_twophase,
-    shard_edges,
-)
+from repro.core.mapreduce import make_distributed_peel_twophase, shard_edges
 from repro.graph.generators import chung_lu_power_law
 
 
@@ -73,7 +70,7 @@ def main():
     n_dev = jax.device_count()
     mesh = Mesh(np.asarray(jax.devices()).reshape(n_dev), ("data",))
     t0 = time.time()
-    res = densest_subgraph_distributed(edges, mesh, ("data",), eps=0.5)
+    res = solve(edges, Problem.undirected(eps=0.5, substrate="mesh"), mesh=mesh)
     jax.block_until_ready(res.best_density)
     rho_dist = float(res.best_density)
     print(
@@ -95,10 +92,14 @@ def main():
     )
 
     # ---- 4. Count-Sketch memory mode (paper §5.1) -------------------------
-    sk = densest_subgraph_sketched(edges, eps=0.5, t=5, b=1 << 16)
+    sk = solve(
+        edges,
+        Problem.undirected(eps=0.5, backend="sketch", sketch_tables=5,
+                           sketch_buckets=1 << 16),
+    )
     print(
         f"[sketch t=5 b=65536] rho={float(sk.best_density):.4f} "
-        f"(node-state memory {5 * (1 << 15) / n:.1%} of exact)"
+        f"(node-state memory {5 * (1 << 16) / n:.1%} of exact)"
     )
 
     assert abs(rho_stream - rho_dist) < 1e-3

@@ -1,29 +1,37 @@
-"""Quickstart: find an (approximately) densest subgraph with Algorithm 1.
+"""Quickstart: the front-door API on a planted dense block.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--n 4000] [--k 80]
 
-Generates a power-law graph with a planted dense block, runs the one-XLA-
-program peel at a few eps settings, and compares against the exact max-flow
-optimum and Charikar's node-at-a-time greedy — the paper's Table 2 in
-miniature.
+Declare a :class:`Problem`, call :func:`solve`, get a
+:class:`DenseSubgraphResult` — then sweep eps as ONE compiled program with
+:func:`solve_batch` and compare against the exact max-flow optimum and
+Charikar's node-at-a-time greedy (the paper's Table 2 in miniature).
 """
 
+import argparse
 import time
 
 import numpy as np
 
 from repro.core import (
+    Problem,
     charikar_greedy,
-    densest_subgraph,
     densest_subgraph_exact,
-    densest_subgraph_sets,
+    solve,
+    solve_batch,
 )
 from repro.graph.generators import planted_dense_subgraph
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--avg-deg", type=float, default=5.0)
+    ap.add_argument("--k", type=int, default=80)
+    args = ap.parse_args(argv)
+
     edges, planted = planted_dense_subgraph(
-        n=4000, avg_deg=5.0, k=80, p_dense=0.6, seed=7
+        n=args.n, avg_deg=args.avg_deg, k=args.k, p_dense=0.6, seed=7
     )
     print(f"graph: n={edges.n_nodes} m={int(edges.num_real_edges())} "
           f"(planted {len(planted)}-node dense block)")
@@ -35,17 +43,35 @@ def main():
     print(f"charikar greedy    = {rho_greedy:.4f} "
           f"(ratio {rho_star / rho_greedy:.3f})")
 
-    for eps in (0.1, 0.5, 1.0):
+    # --- one Problem, one solve ------------------------------------------
+    eps_grid = (0.1, 0.5, 1.0)
+    for eps in eps_grid:
         t0 = time.time()
-        nodes, rho = densest_subgraph_sets(edges, eps=eps)
-        res = densest_subgraph(edges, eps=eps)
+        res = solve(edges, Problem.undirected(eps=eps))
+        nodes = res.nodes()
+        rho = float(res.best_density)
         overlap = len(np.intersect1d(nodes, planted)) / len(planted)
         print(
             f"peel eps={eps:<4} rho={rho:.4f} ratio={rho_star / rho:.3f} "
             f"passes={int(res.passes)} |S|={len(nodes)} "
-            f"planted-recall={overlap:.0%} ({time.time() - t0:.2f}s)"
+            f"planted-recall={overlap:.0%} ({time.time() - t0:.2f}s) "
+            f"[{res.provenance.policy} x {res.provenance.backend} "
+            f"x {res.provenance.substrate}]"
         )
         assert rho_star / rho <= 2 * (1 + eps) + 1e-6  # Lemma 3
+
+    # --- the whole eps sweep as ONE XLA program ---------------------------
+    t0 = time.time()
+    batch = solve_batch(
+        edges, Problem.undirected(max_passes=64), eps=list(eps_grid)
+    )
+    rhos = np.asarray(batch.best_density)
+    print(
+        f"solve_batch eps={eps_grid}: rho={np.round(rhos, 4).tolist()} "
+        f"in one program ({time.time() - t0:.2f}s)"
+    )
+    for eps, rho in zip(eps_grid, rhos):
+        assert rho_star / rho <= 2 * (1 + eps) + 1e-6
 
 
 if __name__ == "__main__":

@@ -1,10 +1,21 @@
 """Core library: the paper's densest-subgraph algorithms.
 
+One front door (core/api.py): declare a :class:`Problem` (objective × eps ×
+backend × substrate), call :func:`solve` / :func:`solve_batch`, get a
+:class:`DenseSubgraphResult`.  The :class:`Solver` memoizes compiled
+programs so production request rates never retrace; ``solve_batch`` runs
+multi-eps / multi-c / stacked-graph sweeps as one XLA program.
+
+    from repro.core import Problem, solve
+    res = solve(edges, Problem.undirected(eps=0.5))
+    res = solve(edges, Problem.directed())            # c-grid search
+    res = solve(edges, Problem.at_least_k(k=100))
+
 All peel variants are one engine (core/engine.py): a single pass body
 parameterized by RemovalPolicy × DegreeBackend, launched on a jit, host
-streaming, or shard_map substrate.
+streaming, or shard_map substrate.  The historical entry points below are
+thin delegations through the same lowering and stay bit-identical:
 
-Public API:
   densest_subgraph                 Algorithm 1 (undirected, (2+2eps)-approx)
   densest_subgraph_at_least_k      Algorithm 2 (size >= k, (3+3eps)-approx)
   densest_subgraph_directed        Algorithm 3 (directed, per-c)
@@ -17,6 +28,17 @@ Public API:
   run_peel / PeelOutcome           the engine itself (policies × backends)
 """
 
+from repro.core.api import (
+    DenseSubgraphResult,
+    Problem,
+    Provenance,
+    Solver,
+    default_solver,
+    deprecated_alias_getattr,
+    solve,
+    solve_batch,
+    stack_graphs,
+)
 from repro.core.charikar import charikar_greedy
 from repro.core.countsketch import (
     SketchBackend,
@@ -52,32 +74,48 @@ from repro.core.mapreduce import (
     make_distributed_peel,
     shard_edges,
 )
-from repro.core.peel import PeelResult, densest_subgraph, densest_subgraph_sets
+from repro.core.peel import densest_subgraph, densest_subgraph_sets
 from repro.core.peel_directed import (
     c_grid,
     densest_directed_search,
     densest_directed_search_vmapped,
     densest_subgraph_directed,
 )
-from repro.core.peel_topk import PeelTopKResult, densest_subgraph_at_least_k
+from repro.core.peel_topk import densest_subgraph_at_least_k
 from repro.core.streaming import StreamingDensest, chunked_from_arrays
+
+# Deprecated result-type aliases (kept importable; warn on access).
+__getattr__ = deprecated_alias_getattr(
+    __name__,
+    {
+        "PeelResult": DenseSubgraphResult,
+        "PeelTopKResult": DenseSubgraphResult,
+        "DirectedPeelResult": DenseSubgraphResult,
+    },
+)
+
 
 __all__ = [
     "AtLeastKFraction",
+    "DenseSubgraphResult",
     "DirectedST",
     "ExactBackend",
     "FnBackend",
     "MeshSegmentSumBackend",
     "PeelOutcome",
-    "PeelResult",
+    "PeelResult",  # deprecated alias of DenseSubgraphResult
     "PeelState",
-    "PeelTopKResult",
+    "PeelTopKResult",  # deprecated alias of DenseSubgraphResult
+    "Problem",
+    "Provenance",
     "SketchBackend",
+    "Solver",
     "StreamingDensest",
     "UndirectedThreshold",
     "c_grid",
     "charikar_greedy",
     "chunked_from_arrays",
+    "default_solver",
     "densest_directed_brute",
     "densest_directed_search",
     "densest_directed_search_vmapped",
@@ -93,6 +131,7 @@ __all__ = [
     "make_distributed_directed_peel",
     "make_distributed_peel",
     "make_sketch_params",
+    "max_passes_bound",
     "query_degrees",
     "removal_threshold",
     "run_peel",
@@ -100,6 +139,9 @@ __all__ = [
     "sketch_degrees_from_edges",
     "sketch_endpoint_counters",
     "sketched_degree_fn",
+    "solve",
+    "solve_batch",
+    "stack_graphs",
     "undirected_pass_step",
     "undirected_stats",
 ]

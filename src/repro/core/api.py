@@ -1,0 +1,984 @@
+"""One front door for the paper's densest-subgraph algorithms.
+
+The public surface is three names:
+
+  * :class:`Problem` — a frozen, hashable spec of WHAT to solve: the
+    objective (Algorithm 1/2/3), eps, k, the directed ratio c (or None for
+    the geometric c-grid), the degree backend (``exact | sketch | pallas |
+    auto``) and the launch substrate (``jit | mesh | streaming | auto``).
+  * :func:`solve` / :class:`Solver` — lowers a Problem onto the PeelEngine's
+    RemovalPolicy × DegreeBackend × substrate axes (core/engine.py) and runs
+    it.  A Solver memoizes the jitted programs keyed on the Problem's static
+    fields plus ``(n_nodes, padded m, dtype)`` so repeated calls at
+    production request rates never retrace; :data:`default_solver` backs the
+    module-level helpers and every legacy wrapper.
+  * :func:`solve_batch` — the ROADMAP's batched driver: multi-eps, multi-c
+    and stacked same-shape-graph sweeps as ONE vmapped XLA program (the
+    engine is vmap-clean; the directed c-grid proved it).
+
+Every result is a :class:`DenseSubgraphResult`: the engine's
+:class:`~repro.core.engine.PeelOutcome` arrays plus a static
+:class:`Provenance` recording which cell of the policy × backend × substrate
+matrix actually ran.  The historical ``PeelResult`` / ``PeelTopKResult`` /
+``DirectedPeelResult`` names are deprecated aliases of it.
+
+Lowering map (Problem field -> engine axis)::
+
+    objective  undirected   -> UndirectedThreshold(eps)           (Alg 1, §4.1)
+               at_least_k   -> AtLeastKFraction(k, eps, variants) (Alg 2, §4.2)
+               directed     -> DirectedST(eps, c)                 (Alg 3, §4.3)
+    backend    exact        -> ExactBackend (segment_sum)
+               sketch       -> SketchBackend / _MeshSketchBackend (§5.1)
+               pallas       -> tiled-degree kernel via FnBackend  (kernels/)
+    substrate  jit          -> jax.jit(run_peel)                  (peel*.py)
+               mesh         -> shard_map + psum backends          (§5.2)
+               streaming    -> StreamingDensest chunked driver    (§4, semi-streaming)
+
+The legacy entry points (``densest_subgraph``, ``densest_subgraph_at_least_k``,
+``densest_subgraph_directed``, ``densest_directed_search``,
+``densest_subgraph_sketched``, ``densest_subgraph_distributed``,
+``StreamingDensest``) are thin delegations through this module's lowering
+and stay bit-identical to their pre-redesign outputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.density import max_passes_bound
+from repro.core.engine import (
+    AtLeastKFraction,
+    DirectedST,
+    ExactBackend,
+    FnBackend,
+    MeshSegmentSumBackend,
+    PeelOutcome,
+    RemovalPolicy,
+    UndirectedThreshold,
+    run_peel,
+)
+from repro.graph.edgelist import EdgeList
+
+__all__ = [
+    "DenseSubgraphResult",
+    "Problem",
+    "Provenance",
+    "Solver",
+    "default_solver",
+    "deprecated_alias_getattr",
+    "run_cell",
+    "solve",
+    "solve_batch",
+    "stack_graphs",
+]
+
+_OBJECTIVES = ("undirected", "at_least_k", "directed")
+_BACKENDS = ("exact", "sketch", "pallas", "auto")
+_SUBSTRATES = ("jit", "mesh", "streaming", "auto")
+
+# Above this node count, "auto" trades the O(n) exact degree vector for the
+# O(t*b) Count-Sketch (§5.1's memory regime).
+_AUTO_SKETCH_NODES = 1_000_000
+
+
+# ---------------------------------------------------------------------------
+# Problem — the declarative spec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """What to solve.  Frozen and hashable: the static half of a Solver
+    cache key.  Use the :meth:`undirected` / :meth:`at_least_k` /
+    :meth:`directed` constructors for the common cases.
+
+    ``backend='auto'`` picks sketch above ~1M nodes, exact otherwise;
+    ``substrate='auto'`` picks mesh when a mesh was supplied and more than
+    one device is visible, jit otherwise.  ``c=None`` with the directed
+    objective means "search the geometric c-grid" (resolution ``c_delta``),
+    the paper's practical recipe.
+    """
+
+    objective: str = "undirected"
+    eps: float = 0.5
+    k: Optional[int] = None  # at_least_k: minimum |S|
+    c: Optional[float] = None  # directed: |S|/|T| guess; None -> grid
+    c_delta: float = 2.0  # directed grid resolution (§6.4)
+    backend: str = "exact"
+    substrate: str = "jit"
+    max_passes: Optional[int] = None  # None -> Lemma 4/13 bound
+    track_history: bool = False
+    # Algorithm 2 realization knobs (floor+fallback = single-device legacy,
+    # ceil w/o fallback = distributed legacy).
+    min_deg_fallback: bool = True
+    ceil_count: bool = False
+    # Count-Sketch (§5.1) parameters.
+    sketch_tables: int = 5
+    sketch_buckets: int = 1 << 13
+    sketch_seed: int = 0
+    sketch_node_chunk: int = 1 << 20  # mesh sketch: query streaming chunk
+    # Pallas tiled-degree kernel parameters.
+    tile_size: int = 1024
+    tile_block: int = 512
+    # Mesh substrate parameters.
+    edge_axes: Tuple[str, ...] = ("data",)
+    wire_dtype: str = "f32"  # f32 | bf16 degree-psum wire format
+    # Streaming substrate parameters.
+    stream_chunk: int = 1 << 20
+    stream_workers: int = 4
+
+    def __post_init__(self):
+        if self.objective not in _OBJECTIVES:
+            raise ValueError(
+                f"objective={self.objective!r} not in {_OBJECTIVES}"
+            )
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend={self.backend!r} not in {_BACKENDS}")
+        if self.substrate not in _SUBSTRATES:
+            raise ValueError(
+                f"substrate={self.substrate!r} not in {_SUBSTRATES}"
+            )
+        if self.objective == "at_least_k" and (self.k is None or self.k < 1):
+            raise ValueError("objective='at_least_k' needs k >= 1")
+        if self.c_delta <= 1.0:
+            raise ValueError(
+                f"c_delta={self.c_delta} must be > 1 (geometric grid ratio)"
+            )
+        if self.wire_dtype not in ("f32", "bf16"):
+            raise ValueError(f"wire_dtype={self.wire_dtype!r} not in (f32, bf16)")
+        if not isinstance(self.edge_axes, tuple):
+            object.__setattr__(self, "edge_axes", tuple(self.edge_axes))
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def undirected(cls, eps: float = 0.5, **kw) -> "Problem":
+        """Algorithm 1: (2+2eps)-approximate densest subgraph."""
+        return cls(objective="undirected", eps=float(eps), **kw)
+
+    @classmethod
+    def at_least_k(cls, k: int, eps: float = 0.5, **kw) -> "Problem":
+        """Algorithm 2: (3+3eps)-approximate densest subgraph, |S| >= k."""
+        return cls(objective="at_least_k", k=int(k), eps=float(eps), **kw)
+
+    @classmethod
+    def directed(
+        cls, c: Optional[float] = None, eps: float = 0.5, **kw
+    ) -> "Problem":
+        """Algorithm 3: directed densest subgraph, fixed c or c-grid."""
+        return cls(
+            objective="directed",
+            c=None if c is None else float(c),
+            eps=float(eps),
+            **kw,
+        )
+
+    # -- resolution ---------------------------------------------------------
+    def resolve(self, n_nodes: int, have_mesh: bool = False) -> "Problem":
+        """Resolves ``auto`` axes against the graph/host and validates that
+        the requested matrix cell exists.  ``auto`` only picks the mesh
+        substrate when the caller actually supplied a mesh (``have_mesh``)."""
+        backend = self.backend
+        substrate = self.substrate
+        if substrate == "auto":
+            substrate = "mesh" if have_mesh and len(jax.devices()) > 1 else "jit"
+        if backend == "auto":
+            # The streaming driver IS the large-graph memory regime (O(n)
+            # node state, out-of-core edges): its only cell is exact.
+            if substrate == "streaming":
+                backend = "exact"
+            else:
+                backend = "sketch" if n_nodes > _AUTO_SKETCH_NODES else "exact"
+        p = self
+        if backend != self.backend or substrate != self.substrate:
+            p = dataclasses.replace(self, backend=backend, substrate=substrate)
+        if p.objective == "directed" and p.backend == "pallas":
+            raise ValueError(
+                "the tiled-degree kernel counts both endpoints (undirected); "
+                "directed objectives need backend='exact' or 'sketch'"
+            )
+        if p.substrate == "mesh" and p.backend == "pallas":
+            raise ValueError("backend='pallas' has no mesh (shard_map) cell yet")
+        if p.substrate == "streaming" and (
+            p.objective != "undirected" or p.backend != "exact"
+        ):
+            raise ValueError(
+                "the streaming substrate implements Algorithm 1 with exact "
+                "chunked degrees; use objective='undirected', backend='exact'"
+            )
+        return p
+
+    def resolved_max_passes(self, n_nodes: int) -> int:
+        """Static trip count: explicit, or the Lemma 4 bound (doubled for
+        directed runs — Lemma 13 shrinks one of S/T per pass)."""
+        if self.max_passes is not None:
+            return int(self.max_passes)
+        bound = max_passes_bound(n_nodes, self.eps)
+        return 2 * bound if self.objective == "directed" else bound
+
+
+# ---------------------------------------------------------------------------
+# Result type — PeelOutcome arrays + provenance
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Provenance:
+    """Which cell of the policy × backend × substrate matrix produced a
+    result (static metadata, hashable)."""
+
+    objective: str
+    policy: str
+    backend: str
+    substrate: str
+    n_nodes: int
+    max_passes: int
+    batch: Optional[str] = None  # None | "eps" | "c" | "graphs"
+    cache_hit: bool = False
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DenseSubgraphResult:
+    """The one result type of the front door (and the deprecation target of
+    ``PeelResult`` / ``PeelTopKResult`` / ``DirectedPeelResult``).
+
+    Field-compatible with :class:`~repro.core.engine.PeelOutcome`; batched
+    solves carry a leading sweep axis on every array.  ``extras`` holds
+    sweep-level host data (the directed grid's per-c profile).
+    """
+
+    best_alive: jax.Array  # bool[N] the output set S~ (S side for directed)
+    best_t: jax.Array  # bool[N] T side (directed) | bool[0]
+    best_density: jax.Array  # float32[] rho of the best set
+    best_size: jax.Array  # int32[] |S~|
+    passes: jax.Array  # int32[] passes executed
+    alive: jax.Array  # bool[N] final S bitmap
+    t_alive: jax.Array  # bool[N] final T bitmap | bool[0]
+    history_n: jax.Array  # int32[hist] per-pass |S| (-1 padding)
+    history_m: jax.Array  # float32[hist] per-pass |E(S)|
+    history_rho: jax.Array  # float32[hist] per-pass rho
+    extras: Optional[Dict[str, Any]] = None
+    provenance: Optional[Provenance] = dataclasses.field(
+        default=None, metadata=dict(static=True)
+    )
+
+    @property
+    def best_s(self) -> jax.Array:
+        """Directed-result spelling of the S-side best bitmap."""
+        return self.best_alive
+
+    @property
+    def mask(self) -> jax.Array:
+        return self.best_alive
+
+    @classmethod
+    def from_outcome(
+        cls,
+        out: PeelOutcome,
+        provenance: Optional[Provenance] = None,
+        extras: Optional[Dict[str, Any]] = None,
+    ) -> "DenseSubgraphResult":
+        return cls(*out, extras=extras, provenance=provenance)
+
+    # Host conveniences (not for use under tracing).
+    def nodes(self) -> np.ndarray:
+        """Node ids of the best set (S side for directed)."""
+        return np.nonzero(np.asarray(self.best_alive))[0]
+
+    def t_nodes(self) -> np.ndarray:
+        """Node ids of the best T side (directed results)."""
+        return np.nonzero(np.asarray(self.best_t))[0]
+
+    @property
+    def density(self) -> float:
+        return float(self.best_density)
+
+
+# ---------------------------------------------------------------------------
+# Lowering: Problem -> RemovalPolicy × DegreeBackend
+# ---------------------------------------------------------------------------
+
+
+def _policy_for(
+    problem: Problem, *, eps: Any = None, c: Any = None
+) -> RemovalPolicy:
+    """Problem -> RemovalPolicy.  ``eps``/``c`` may be traced scalars (the
+    batched sweeps rely on it)."""
+    e = problem.eps if eps is None else eps
+    if problem.objective == "undirected":
+        return UndirectedThreshold(e)
+    if problem.objective == "at_least_k":
+        return AtLeastKFraction(
+            k=problem.k,
+            eps=e,
+            min_deg_fallback=problem.min_deg_fallback,
+            ceil_count=problem.ceil_count,
+        )
+    cc = problem.c if c is None else c
+    if cc is None:
+        raise ValueError(
+            "directed lowering needs a concrete or traced c; Problem.c=None "
+            "(grid search) is handled by solve()/solve_batch()"
+        )
+    return DirectedST(eps=e, c=jnp.asarray(cc, jnp.float32))
+
+
+def _backend_for(
+    problem: Problem,
+    n_nodes: int,
+    *,
+    degree_fn: Optional[Callable] = None,
+    tiling: Optional[Tuple[jax.Array, jax.Array]] = None,
+):
+    """Problem -> DegreeBackend (jit substrate).  ``degree_fn`` is the
+    legacy hook escape hatch; ``tiling`` carries the Pallas bucketing arrays
+    as runtime values so compiled programs stay graph-independent."""
+    if degree_fn is not None:
+        return FnBackend(degree_fn)
+    if problem.backend == "exact":
+        return ExactBackend()
+    if problem.backend == "sketch":
+        from repro.core.countsketch import SketchBackend, make_sketch_params
+
+        return SketchBackend(
+            make_sketch_params(
+                problem.sketch_tables, problem.sketch_buckets, problem.sketch_seed
+            )
+        )
+    if problem.backend == "pallas":
+        if tiling is None:
+            raise ValueError("backend='pallas' needs tiling arrays")
+        from repro.kernels.peel_degree.ops import tiled_degrees
+
+        tl, ei = tiling
+
+        def fn(edges: EdgeList, w_alive: jax.Array) -> jax.Array:
+            return tiled_degrees(
+                tl, ei, w_alive,
+                tile_size=problem.tile_size, n_nodes=n_nodes,
+            )
+
+        return FnBackend(fn)
+    raise ValueError(f"unresolved backend {problem.backend!r}")
+
+
+def run_cell(
+    edges: EdgeList,
+    problem: Problem,
+    *,
+    eps: Any = None,
+    c: Any = None,
+    degree_fn: Optional[Callable] = None,
+    tiling: Optional[Tuple[jax.Array, jax.Array]] = None,
+    max_passes: Optional[int] = None,
+) -> PeelOutcome:
+    """The pure, traceable lowering core: one Problem cell -> ``run_peel``.
+
+    Safe under jit/vmap/shard_map; ``eps`` and ``c`` may be traced scalars.
+    Everything in solve()/solve_batch() and every legacy wrapper bottoms out
+    here (substrates add their own launch wrappers around it).
+    """
+    prob = problem.resolve(edges.n_nodes)
+    mp = max_passes if max_passes is not None else prob.resolved_max_passes(edges.n_nodes)
+    policy = _policy_for(prob, eps=eps, c=c)
+    backend = _backend_for(prob, edges.n_nodes, degree_fn=degree_fn, tiling=tiling)
+    return run_peel(
+        edges, policy, backend, mp, track_history=prob.track_history
+    )
+
+
+def c_grid(n_nodes: int, delta: float = 2.0) -> np.ndarray:
+    """Geometric grid of c = |S|/|T| guesses: delta^j covering [1/n, n]."""
+    j_max = int(math.ceil(math.log(max(n_nodes, 2)) / math.log(delta)))
+    return np.asarray([delta**j for j in range(-j_max, j_max + 1)], np.float32)
+
+
+def stack_graphs(graphs: Sequence[EdgeList]) -> EdgeList:
+    """Stacks same-shape EdgeLists along a leading batch axis for
+    :meth:`Solver.solve_batch` (which also accepts the sequence directly).
+    The result is a batched container: per-graph helpers that assume 1-D
+    edge arrays (``n_edges_padded``, ``with_padding``) don't apply to it."""
+    g0 = graphs[0]
+    for g in graphs[1:]:
+        if g.n_nodes != g0.n_nodes or g.n_edges_padded != g0.n_edges_padded:
+            raise ValueError(
+                "stacked sweeps need same-shape graphs: got "
+                f"(n={g.n_nodes}, E={g.n_edges_padded}) vs "
+                f"(n={g0.n_nodes}, E={g0.n_edges_padded})"
+            )
+        if g.directed != g0.directed:
+            raise ValueError("stacked sweeps need uniform directedness")
+    return EdgeList(
+        src=jnp.stack([g.src for g in graphs]),
+        dst=jnp.stack([g.dst for g in graphs]),
+        weight=jnp.stack([g.weight for g in graphs]),
+        mask=jnp.stack([g.mask for g in graphs]),
+        n_nodes=g0.n_nodes,
+        directed=g0.directed,
+    )
+
+
+def deprecated_alias_getattr(module_name: str, aliases: Dict[str, Any]):
+    """Builds a module ``__getattr__`` that serves deprecated names with a
+    DeprecationWarning (the PeelResult-family shims share this one body)."""
+
+    def __getattr__(name: str):
+        target = aliases.get(name)
+        if target is not None:
+            import warnings
+
+            warnings.warn(
+                f"{module_name}.{name} is deprecated; use "
+                "repro.core.DenseSubgraphResult",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            return target
+        raise AttributeError(f"module {module_name!r} has no attribute {name!r}")
+
+    return __getattr__
+
+
+def _tiling_arrays(edges: EdgeList, problem: Problem):
+    """Host-side Pallas tile bucketing for this graph (runtime args of the
+    cached program, so the compiled code is reusable across graphs).
+
+    This is an O(E) numpy pass per call — the compiled program is cached but
+    the bucketing is not (it depends on edge CONTENT, which a shape-keyed
+    cache cannot see).  For request-rate serving of one graph, bucket once
+    and pass ``degree_fn=degree_fn_from_tiling(tiled)`` instead: the hook
+    keys the program cache by identity and skips the per-call rebuild."""
+    from repro.kernels.peel_degree.ops import tiling_for_edges
+
+    tiled = tiling_for_edges(
+        edges, tile_size=problem.tile_size, block=problem.tile_block
+    )
+    return jnp.asarray(tiled.target_local), jnp.asarray(tiled.edge_index)
+
+
+# ---------------------------------------------------------------------------
+# Solver — compile caching + batched drivers
+# ---------------------------------------------------------------------------
+
+
+def _policy_name(problem: Problem) -> str:
+    return {
+        "undirected": "undirected_threshold",
+        "at_least_k": "at_least_k_fraction",
+        "directed": "directed_st",
+    }[problem.objective]
+
+
+def _fields_key(problem: Problem, exclude: Tuple[str, ...] = ()) -> Tuple:
+    """Hashable tuple of the Problem's static fields, minus the fields a
+    program takes as runtime arguments (c for directed programs, eps for
+    eps-sweeps)."""
+    return tuple(
+        (f.name, getattr(problem, f.name))
+        for f in dataclasses.fields(problem)
+        if f.name not in exclude
+    )
+
+
+class Solver:
+    """The stateful front door: memoizes jitted programs so same-shape
+    requests never retrace.
+
+    Cache key: ``(kind, problem static fields, max_passes, n_nodes,
+    padded m, weight dtype, degree_fn, aux shapes | mesh)``.  ``trace_count``
+    counts actual retraces (incremented inside the traced Python bodies) and
+    ``cache_hits``/``cache_misses`` count program-cache lookups — the
+    observability hooks the retrace tests and bench_api use.
+    """
+
+    def __init__(self):
+        self._programs: Dict[Tuple, Callable] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.trace_count = 0
+
+    # -- cache plumbing -----------------------------------------------------
+    def _mark_trace(self) -> None:
+        # Runs only while jax traces the program body: a retrace counter.
+        self.trace_count += 1
+
+    def _get(self, key: Tuple, build: Callable[[], Callable]):
+        fn = self._programs.get(key)
+        if fn is None:
+            self.cache_misses += 1
+            fn = build()
+            self._programs[key] = fn
+            return fn, False
+        self.cache_hits += 1
+        return fn, True
+
+    def cache_size(self) -> int:
+        return len(self._programs)
+
+    def _key(
+        self,
+        kind: str,
+        problem: Problem,
+        mp: int,
+        n_nodes: int,
+        m_padded: int,
+        dtype,
+        degree_fn,
+        aux: Tuple = (),
+    ) -> Tuple:
+        # A field may only be dropped from the key when the program takes it
+        # as a RUNTIME argument (c for per-c and c-sweep programs, eps for
+        # eps-sweep programs — the eps/graphs sweeps bake a fixed directed c
+        # into the closure, so c must key those) or when the resolved cell
+        # never reads it (no spurious recompiles from irrelevant knobs).
+        exclude = {"max_passes", "c_delta"}  # host-side grid loop only
+        if kind in ("solve", "mesh", "c"):
+            exclude.add("c")
+        if kind == "eps":
+            exclude.add("eps")
+        if problem.objective != "at_least_k":
+            exclude |= {"k", "min_deg_fallback", "ceil_count"}
+        if problem.backend != "sketch":
+            exclude |= {"sketch_tables", "sketch_buckets", "sketch_seed"}
+        if not (problem.backend == "sketch" and problem.substrate == "mesh"):
+            exclude.add("sketch_node_chunk")
+        if problem.backend != "pallas":
+            exclude |= {"tile_size", "tile_block"}
+        if problem.substrate != "mesh":
+            exclude |= {"edge_axes", "wire_dtype"}
+        # Programs are never built for the streaming substrate.
+        exclude |= {"stream_chunk", "stream_workers"}
+        return (
+            kind,
+            _fields_key(problem, exclude),
+            mp,
+            n_nodes,
+            m_padded,
+            str(dtype),
+            degree_fn,
+            aux,
+        )
+
+    # -- program builders ---------------------------------------------------
+    def _build_jit_program(
+        self,
+        problem: Problem,
+        mp: int,
+        kind: str,
+        degree_fn: Optional[Callable],
+        with_tiling: bool,
+    ) -> Callable:
+        solver = self
+        directed = problem.objective == "directed"
+
+        def cell(edges, *, eps=None, c=None, tiling=None):
+            return run_cell(
+                edges, problem, eps=eps, c=c, degree_fn=degree_fn,
+                tiling=tiling, max_passes=mp,
+            )
+
+        if kind == "solve":
+            if with_tiling:
+                def fn(edges, tl, ei):
+                    solver._mark_trace()
+                    return cell(edges, tiling=(tl, ei))
+            elif directed:
+                def fn(edges, c):
+                    solver._mark_trace()
+                    return cell(edges, c=c)
+            else:
+                def fn(edges):
+                    solver._mark_trace()
+                    return cell(edges)
+        elif kind == "eps":
+            if with_tiling:
+                def fn(edges, tl, ei, eps_vec):
+                    solver._mark_trace()
+                    return jax.vmap(
+                        lambda e: cell(edges, eps=e, tiling=(tl, ei))
+                    )(eps_vec)
+            else:
+                def fn(edges, eps_vec):
+                    solver._mark_trace()
+                    return jax.vmap(lambda e: cell(edges, eps=e))(eps_vec)
+        elif kind == "c":
+            def fn(edges, c_vec):
+                solver._mark_trace()
+                return jax.vmap(lambda c: cell(edges, c=c))(c_vec)
+        elif kind == "graphs":
+            def fn(edges):
+                solver._mark_trace()
+                return jax.vmap(lambda g: cell(g))(edges)
+        else:
+            raise ValueError(kind)
+        return jax.jit(fn)
+
+    def _build_mesh_program(
+        self, problem: Problem, mp: int, mesh, n_nodes: int
+    ) -> Callable:
+        """shard_map substrate (§5.2): edges sharded over ``edge_axes``,
+        node state replicated, one fused psum per pass."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        axes = tuple(problem.edge_axes)
+        if problem.backend == "sketch":
+            from repro.core.countsketch import make_sketch_params
+            from repro.core.mapreduce import _MeshSketchBackend
+
+            backend = _MeshSketchBackend(
+                params=make_sketch_params(
+                    problem.sketch_tables,
+                    problem.sketch_buckets,
+                    problem.sketch_seed,
+                ),
+                axes=axes,
+                node_chunk=min(problem.sketch_node_chunk, max(n_nodes, 1)),
+            )
+        else:
+            backend = MeshSegmentSumBackend(axes, problem.wire_dtype)
+        solver = self
+        directed = problem.objective == "directed"
+
+        def _local_run(src, dst, weight, mask, c=None):
+            e = EdgeList(src=src, dst=dst, weight=weight, mask=mask, n_nodes=n_nodes)
+            policy = _policy_for(problem, c=c)
+            return run_peel(
+                e, policy, backend, mp, track_history=problem.track_history
+            )
+
+        if directed:
+            def local(src, dst, weight, mask, c):
+                return _local_run(src, dst, weight, mask, c)
+
+            in_specs = (P(axes),) * 4 + (P(),)
+        else:
+            def local(src, dst, weight, mask):
+                return _local_run(src, dst, weight, mask)
+
+            in_specs = (P(axes),) * 4
+
+        mapped = shard_map(
+            local, mesh=mesh, in_specs=in_specs, out_specs=P(), check_vma=False
+        )
+
+        def fn(*args):
+            solver._mark_trace()
+            return mapped(*args)
+
+        return jax.jit(fn)
+
+    def _mesh_fn(self, prob: Problem, mesh, n_nodes: int):
+        """Cached shard_map program for a RESOLVED problem.  Keyed without
+        edge shapes (jit re-keys on shard shapes internally) so
+        ``make_distributed_*`` warming and ``solve(substrate='mesh')``
+        serving share one compilation."""
+        mp = prob.resolved_max_passes(n_nodes)
+        key = self._key("mesh", prob, mp, n_nodes, -1, "sharded", None, (mesh,))
+        fn, hit = self._get(
+            key, lambda: self._build_mesh_program(prob, mp, mesh, n_nodes)
+        )
+        return fn, hit, mp
+
+    def mesh_program(
+        self, problem: Problem, mesh, n_nodes: int
+    ) -> Callable:
+        """The cached shard_map program ``fn(src, dst, weight, mask[, c]) ->
+        PeelOutcome`` — the lowering target of the ``make_distributed_*``
+        builders in core/mapreduce.py."""
+        fn, _, _ = self._mesh_fn(problem.resolve(n_nodes), mesh, n_nodes)
+        return fn
+
+    # -- result wrapping ----------------------------------------------------
+    def _wrap(
+        self,
+        out: PeelOutcome,
+        problem: Problem,
+        n_nodes: int,
+        mp: int,
+        cache_hit: bool,
+        extras: Optional[Dict[str, Any]] = None,
+        batch: Optional[str] = None,
+    ) -> DenseSubgraphResult:
+        prov = Provenance(
+            objective=problem.objective,
+            policy=_policy_name(problem),
+            backend=problem.backend,
+            substrate=problem.substrate,
+            n_nodes=n_nodes,
+            max_passes=mp,
+            batch=batch,
+            cache_hit=cache_hit,
+        )
+        return DenseSubgraphResult.from_outcome(out, provenance=prov, extras=extras)
+
+    # -- solve --------------------------------------------------------------
+    def solve(
+        self,
+        graph: EdgeList,
+        problem: Problem,
+        *,
+        mesh=None,
+        degree_fn: Optional[Callable] = None,
+        checkpoint_dir: Optional[str] = None,
+        resume: bool = False,
+    ) -> DenseSubgraphResult:
+        """Runs one Problem on one graph.  ``mesh`` is required for the mesh
+        substrate; ``checkpoint_dir``/``resume`` apply to streaming;
+        ``degree_fn`` is the legacy custom-degree hook (keys the cache by
+        identity)."""
+        if not isinstance(graph, EdgeList):
+            raise TypeError(
+                f"solve() takes an EdgeList graph, got {type(graph).__name__}"
+            )
+        prob = problem.resolve(graph.n_nodes, have_mesh=mesh is not None)
+        if prob.substrate != "streaming" and (checkpoint_dir is not None or resume):
+            raise ValueError(
+                "checkpoint_dir/resume only apply to substrate='streaming'"
+            )
+        if prob.substrate == "streaming":
+            if degree_fn is not None:
+                raise ValueError(
+                    "degree_fn hooks only apply to the jit substrate"
+                )
+            return self._solve_streaming(graph, prob, checkpoint_dir, resume)
+        if prob.substrate == "mesh":
+            if degree_fn is not None:
+                raise ValueError(
+                    "degree_fn hooks only apply to the jit substrate; mesh "
+                    "runs need a psum'ing backend (backend='exact'|'sketch')"
+                )
+            return self._solve_mesh(graph, prob, mesh)
+
+        n = graph.n_nodes
+        mp = prob.resolved_max_passes(n)
+        with_tiling = prob.backend == "pallas" and degree_fn is None
+        aux: Tuple = ()
+        if with_tiling:
+            aux = _tiling_arrays(graph, prob)
+        key = self._key(
+            "solve", prob, mp, n, graph.n_edges_padded,
+            graph.weight.dtype, degree_fn, tuple(a.shape for a in aux),
+        )
+        fn, hit = self._get(
+            key,
+            lambda: self._build_jit_program(prob, mp, "solve", degree_fn, with_tiling),
+        )
+        if prob.objective == "directed":
+            if prob.c is None:
+                return self._directed_grid(graph, prob, mp, fn, hit)
+            out = fn(graph, jnp.float32(prob.c))
+        else:
+            out = fn(graph, *aux)
+        return self._wrap(out, prob, n, mp, hit)
+
+    def _directed_grid(
+        self, graph: EdgeList, prob: Problem, mp: int, fn, hit: bool
+    ) -> DenseSubgraphResult:
+        """The paper's practical directed recipe: sweep the geometric c-grid
+        through ONE compiled per-c program (c is a runtime scalar)."""
+        grid = c_grid(graph.n_nodes, prob.c_delta)
+        best = None
+        best_c = None
+        rhos = []
+        passes = []
+        for c in grid:
+            out = fn(graph, jnp.float32(c))
+            rho = float(out.best_density)
+            rhos.append(rho)
+            passes.append(int(out.passes))
+            if best is None or rho > float(best.best_density):
+                best, best_c = out, float(c)
+        extras = {
+            "best_c": best_c,
+            "c_grid": np.asarray(grid),
+            "c_density": np.asarray(rhos),
+            "c_passes": np.asarray(passes),
+        }
+        return self._wrap(best, prob, graph.n_nodes, mp, hit, extras=extras)
+
+    def _solve_mesh(
+        self, graph: EdgeList, prob: Problem, mesh
+    ) -> DenseSubgraphResult:
+        if mesh is None:
+            raise ValueError("substrate='mesh' needs solve(..., mesh=Mesh)")
+        from repro.core.mapreduce import shard_edges
+
+        sh = shard_edges(graph, mesh, prob.edge_axes)
+        fn, hit, mp = self._mesh_fn(prob, mesh, sh.n_nodes)
+        if prob.objective == "directed":
+            if prob.c is None:
+                grid_fn = lambda e, c: fn(e.src, e.dst, e.weight, e.mask, c)
+                return self._directed_grid(sh, prob, mp, grid_fn, hit)
+            out = fn(sh.src, sh.dst, sh.weight, sh.mask, jnp.float32(prob.c))
+        else:
+            out = fn(sh.src, sh.dst, sh.weight, sh.mask)
+        return self._wrap(out, prob, sh.n_nodes, mp, hit)
+
+    def _solve_streaming(
+        self,
+        graph: EdgeList,
+        prob: Problem,
+        checkpoint_dir: Optional[str],
+        resume: bool,
+    ) -> DenseSubgraphResult:
+        """Semi-streaming substrate: chunked multi-pass driver with O(n)
+        node state (StreamingDensest keeps the checkpoint/straggler logic)."""
+        from repro.core.streaming import StreamingDensest, chunked_from_arrays
+
+        mask = np.asarray(graph.mask)
+        src = np.asarray(graph.src)[mask]
+        dst = np.asarray(graph.dst)[mask]
+        w = np.asarray(graph.weight)[mask]
+        drv = StreamingDensest(
+            chunked_from_arrays(src, dst, w, chunk=prob.stream_chunk),
+            n_nodes=graph.n_nodes,
+            eps=prob.eps,
+            checkpoint_dir=checkpoint_dir,
+            n_workers=prob.stream_workers,
+        )
+        st = drv.run(max_passes=prob.max_passes, resume=resume)
+        mp = prob.resolved_max_passes(graph.n_nodes)
+        hist = np.asarray(st.history, np.float64).reshape(-1, 3)
+        best_alive = jnp.asarray(st.best_alive)
+        out = PeelOutcome(
+            best_alive=best_alive,
+            best_t=jnp.zeros((0,), bool),
+            best_density=jnp.asarray(st.best_rho, jnp.float32),
+            best_size=jnp.sum(best_alive.astype(jnp.int32)),
+            passes=jnp.asarray(st.pass_idx, jnp.int32),
+            alive=jnp.asarray(st.alive),
+            t_alive=jnp.zeros((0,), bool),
+            history_n=jnp.asarray(hist[:, 0], jnp.int32),
+            history_m=jnp.asarray(hist[:, 1], jnp.float32),
+            history_rho=jnp.asarray(hist[:, 2], jnp.float32),
+        )
+        return self._wrap(out, prob, graph.n_nodes, mp, cache_hit=False)
+
+    # -- solve_batch --------------------------------------------------------
+    def solve_batch(
+        self,
+        graph: Union[EdgeList, Sequence[EdgeList]],
+        problem: Problem,
+        *,
+        eps=None,
+        c=None,
+        degree_fn: Optional[Callable] = None,
+    ) -> DenseSubgraphResult:
+        """One XLA program for a whole sweep (ROADMAP batched driver).
+
+        Exactly one batch axis: ``eps=`` (vector of eps values), ``c=``
+        (vector of directed ratio guesses), or a sequence of same-shape
+        graphs.  Every array of the result gains a leading sweep axis; the
+        engine's vmapped while_loop runs to the slowest lane but each lane's
+        values are bit-identical to its standalone solve (for eps values
+        exactly representable in float32).
+
+        With ``max_passes=None`` the static trip bound is taken at the
+        loosest point of the sweep (min eps); pass an explicit
+        ``Problem.max_passes`` to pin it.
+        """
+        stacked = isinstance(graph, (list, tuple)) or (
+            isinstance(graph, EdgeList) and graph.src.ndim == 2
+        )
+        if sum(x is not None for x in (eps, c)) + stacked != 1:
+            raise ValueError(
+                "solve_batch needs exactly one batch axis: eps=, c=, or "
+                "stacked same-shape graphs (a sequence or a stack_graphs result)"
+            )
+
+        if stacked:
+            batched = graph if isinstance(graph, EdgeList) else stack_graphs(list(graph))
+            prob = problem.resolve(batched.n_nodes)
+            if prob.substrate != "jit":
+                raise ValueError("solve_batch runs on the jit substrate")
+            if prob.backend == "pallas":
+                raise ValueError(
+                    "stacked-graph sweeps need a graph-independent backend "
+                    "(tile bucketing is per-graph); use exact or sketch"
+                )
+            if prob.objective == "directed" and prob.c is None:
+                raise ValueError("stacked directed sweeps need a fixed c")
+            mp = prob.resolved_max_passes(batched.n_nodes)
+            key = self._key(
+                "graphs", prob, mp, batched.n_nodes, batched.src.shape,
+                batched.weight.dtype, degree_fn,
+            )
+            fn, hit = self._get(
+                key,
+                lambda: self._build_jit_program(prob, mp, "graphs", degree_fn, False),
+            )
+            out = fn(batched)
+            return self._wrap(out, prob, batched.n_nodes, mp, hit, batch="graphs")
+
+        if not isinstance(graph, EdgeList):
+            raise TypeError(
+                f"solve_batch takes an EdgeList or a sequence, got {type(graph).__name__}"
+            )
+        prob = problem.resolve(graph.n_nodes)
+        if prob.substrate != "jit":
+            raise ValueError("solve_batch runs on the jit substrate")
+        n = graph.n_nodes
+
+        if eps is not None:
+            eps_host = np.asarray(eps, np.float32).reshape(-1)
+            if prob.max_passes is not None:
+                mp = int(prob.max_passes)
+            else:
+                loosest = dataclasses.replace(prob, eps=float(eps_host.min()))
+                mp = loosest.resolved_max_passes(n)
+            if prob.objective == "directed" and prob.c is None:
+                raise ValueError("eps sweeps over a directed Problem need a fixed c")
+            with_tiling = prob.backend == "pallas" and degree_fn is None
+            aux: Tuple = _tiling_arrays(graph, prob) if with_tiling else ()
+            key = self._key(
+                "eps", prob, mp, n, graph.n_edges_padded,
+                graph.weight.dtype, degree_fn, tuple(a.shape for a in aux),
+            )
+            fn, hit = self._get(
+                key,
+                lambda: self._build_jit_program(prob, mp, "eps", degree_fn, with_tiling),
+            )
+            out = fn(graph, *aux, jnp.asarray(eps_host))
+            return self._wrap(out, prob, n, mp, hit, batch="eps")
+
+        # c sweep (directed only)
+        if prob.objective != "directed":
+            raise ValueError("c sweeps only apply to the directed objective")
+        c_host = np.asarray(c, np.float32).reshape(-1)
+        mp = prob.resolved_max_passes(n)
+        key = self._key(
+            "c", prob, mp, n, graph.n_edges_padded,
+            graph.weight.dtype, degree_fn,
+        )
+        fn, hit = self._get(
+            key, lambda: self._build_jit_program(prob, mp, "c", degree_fn, False)
+        )
+        out = fn(graph, jnp.asarray(c_host))
+        return self._wrap(out, prob, n, mp, hit, batch="c")
+
+
+# ---------------------------------------------------------------------------
+# Module-level front door (one shared program cache)
+# ---------------------------------------------------------------------------
+
+default_solver = Solver()
+
+
+def solve(graph: EdgeList, problem: Problem, **kw) -> DenseSubgraphResult:
+    """``Solver.solve`` on the process-wide :data:`default_solver` (shared
+    compile cache — the production entry point and the target of every
+    legacy wrapper)."""
+    return default_solver.solve(graph, problem, **kw)
+
+
+def solve_batch(graph, problem: Problem, **kw) -> DenseSubgraphResult:
+    """``Solver.solve_batch`` on the process-wide :data:`default_solver`."""
+    return default_solver.solve_batch(graph, problem, **kw)

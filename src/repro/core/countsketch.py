@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.peel import PeelResult, densest_subgraph
+from repro.core.api import DenseSubgraphResult, Problem, solve
 from repro.graph.edgelist import EdgeList
 
 __all__ = [
@@ -160,9 +160,20 @@ def densest_subgraph_sketched(
     b: int = 1 << 13,
     seed: int = 0,
     max_passes: Optional[int] = None,
-) -> PeelResult:
-    """Algorithm 1 with Count-Sketch degrees (the Table 4 configuration)."""
-    params = make_sketch_params(t, b, seed)
-    return densest_subgraph(
-        edges, eps=eps, max_passes=max_passes, degree_fn=sketched_degree_fn(params)
+) -> DenseSubgraphResult:
+    """Algorithm 1 with Count-Sketch degrees (the Table 4 configuration).
+
+    Thin delegation through the front door: ``Problem(backend='sketch')``
+    lowers onto :class:`SketchBackend`, which is bit-identical to the
+    historical ``degree_fn=sketched_degree_fn(params)`` hook (the engine
+    equivalence tests pin this)."""
+    problem = Problem.undirected(
+        eps=eps,
+        max_passes=max_passes,
+        track_history=True,
+        backend="sketch",
+        sketch_tables=t,
+        sketch_buckets=b,
+        sketch_seed=seed,
     )
+    return solve(edges, problem)

@@ -1,5 +1,10 @@
 """PeelEngine — the single peel-pass implementation behind every algorithm.
 
+This is the *mechanism* layer: the declarative front door that lowers onto
+it lives in core/api.py (``Problem`` -> policy × backend × substrate ->
+``run_peel``); prefer ``repro.core.solve`` unless you are composing engine
+pieces directly.
+
 Algorithms 1, 2 and 3 of the paper share one pass structure: count induced
 degrees, compute the density, record the best intermediate set, remove the
 below-threshold nodes.  This module implements that pass body EXACTLY ONCE

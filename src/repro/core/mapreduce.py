@@ -8,12 +8,14 @@ mesh:
   density counters                  ->  psum of local edge weight
   node filter (2 MR passes)         ->  alive-bitmap mask, recomputed locally
 
-This module is the *shard_map substrate* of the PeelEngine: every builder
-constructs a local ``EdgeList`` view of its edge shard inside ``shard_map``
-and runs :func:`repro.core.engine.run_peel` with a psum'ing backend
+This module is the *shard_map substrate* of the PeelEngine.  The
+``make_distributed_*`` builders are thin delegations through the front
+door's mesh lowering (:meth:`repro.core.api.Solver.mesh_program`): every
+one constructs a ``Problem`` and receives the cached
+``jit(shard_map(run_peel))`` program with a psum'ing backend
 (:class:`~repro.core.engine.MeshSegmentSumBackend` or the Count-Sketch
-:class:`_MeshSketchBackend`).  The pass body — threshold, best-set tracking,
-removal — is the engine's; nothing here re-implements it.
+:class:`_MeshSketchBackend`).  The pass body — threshold, best-set
+tracking, removal — is the engine's; nothing here re-implements it.
 
 The *entire* O(log_{1+eps} n)-pass algorithm is one compiled XLA program: a
 ``lax.while_loop`` whose body contains exactly two fused collectives per pass
@@ -36,15 +38,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core.api import DenseSubgraphResult, Problem, default_solver, solve
 from repro.core.density import max_passes_bound
 from repro.core.engine import (
-    AtLeastKFraction,
-    DirectedST,
     MeshSegmentSumBackend,
+    PeelOutcome,
     UndirectedThreshold,
     run_peel,
 )
-from repro.core.peel import PeelResult
 from repro.graph.edgelist import EdgeList
 
 
@@ -79,7 +80,7 @@ def make_distributed_peel(
 ):
     """Builds the jitted multi-device Algorithm 1.
 
-    Returns fn(src, dst, weight, mask) -> PeelResult, where edge arrays are
+    Returns fn(src, dst, weight, mask) -> PeelOutcome, where edge arrays are
     sharded over ``edge_axes`` and everything else is replicated.
 
     ``wire_dtype='bf16'`` halves the per-pass degree psum (the dominant
@@ -90,24 +91,15 @@ def make_distributed_peel(
     proof's slack and (b) the min-degree progress fallback is unaffected
     (EXPERIMENTS.md Perf, densest x twitter_lg).
     """
-    axes = tuple(edge_axes)
     assert n_nodes is not None
-    n = n_nodes
-    mp = max_passes if max_passes is not None else max_passes_bound(n, eps)
-    policy = UndirectedThreshold(eps)
-    backend = MeshSegmentSumBackend(axes, wire_dtype)
-
-    def peel_local(src, dst, weight, mask):
-        return run_peel(_local_edges(src, dst, weight, mask, n), policy, backend, mp)
-
-    sharded = shard_map(
-        peel_local,
-        mesh=mesh,
-        in_specs=(P(axes),) * 4,
-        out_specs=P(),
-        check_vma=False,
+    problem = Problem.undirected(
+        eps=eps,
+        max_passes=max_passes,
+        substrate="mesh",
+        edge_axes=tuple(edge_axes),
+        wire_dtype=wire_dtype,
     )
-    return jax.jit(sharded)
+    return default_solver.mesh_program(problem, mesh, n_nodes)
 
 
 def densest_subgraph_distributed(
@@ -116,13 +108,13 @@ def densest_subgraph_distributed(
     edge_axes: Tuple[str, ...] = ("data",),
     eps: float = 0.5,
     max_passes: Optional[int] = None,
-) -> PeelResult:
-    """Convenience wrapper: shard + run."""
-    sharded = shard_edges(edges, mesh, edge_axes)
-    fn = make_distributed_peel(
-        mesh, edge_axes, eps=eps, max_passes=max_passes, n_nodes=sharded.n_nodes
+) -> DenseSubgraphResult:
+    """Convenience wrapper: shard + run through the front door."""
+    problem = Problem.undirected(
+        eps=eps, max_passes=max_passes, substrate="mesh",
+        edge_axes=tuple(edge_axes),
     )
-    return fn(sharded.src, sharded.dst, sharded.weight, sharded.mask)
+    return solve(edges, problem, mesh=mesh)
 
 
 def make_distributed_peel_twophase(
@@ -196,9 +188,9 @@ def make_distributed_peel_twophase(
     )
 
     @jax.jit
-    def run(src, dst, weight, mask) -> PeelResult:
+    def run(src, dst, weight, mask) -> PeelOutcome:
         best_alive, best_rho, t, final_alive = sharded(src, dst, weight, mask)
-        return PeelResult(
+        return PeelOutcome(
             best_alive=best_alive,
             best_t=jnp.zeros((0,), bool),
             best_density=best_rho,
@@ -275,31 +267,25 @@ def make_distributed_sketched_peel(
     counter psum.  Returns fn(src, dst, weight, mask) ->
     (best_alive, best_rho, passes).
     """
-    from repro.core.countsketch import make_sketch_params
-
-    axes = tuple(edge_axes)
     assert n_nodes is not None
-    n = n_nodes
-    policy = UndirectedThreshold(eps)
-    backend = _MeshSketchBackend(
-        params=make_sketch_params(t, b, seed), axes=axes,
-        node_chunk=min(node_chunk, max(n, 1)),
+    problem = Problem.undirected(
+        eps=eps,
+        max_passes=max_passes,
+        substrate="mesh",
+        backend="sketch",
+        edge_axes=tuple(edge_axes),
+        sketch_tables=t,
+        sketch_buckets=b,
+        sketch_seed=seed,
+        sketch_node_chunk=node_chunk,
     )
+    fn = default_solver.mesh_program(problem, mesh, n_nodes)
 
-    def peel_local(src, dst, weight, mask):
-        out = run_peel(
-            _local_edges(src, dst, weight, mask, n), policy, backend, max_passes
-        )
+    def run(src, dst, weight, mask):
+        out = fn(src, dst, weight, mask)
         return out.best_alive, out.best_density, out.passes
 
-    sharded = shard_map(
-        peel_local,
-        mesh=mesh,
-        in_specs=(P(axes),) * 4,
-        out_specs=(P(), P(), P()),
-        check_vma=False,
-    )
-    return jax.jit(sharded)
+    return run
 
 
 def make_distributed_topk_peel(
@@ -318,24 +304,17 @@ def make_distributed_topk_peel(
     psum, so the rank selection is computed identically on every device —
     no extra collective beyond Algorithm 1's.
     """
-    axes = tuple(edge_axes)
     assert n_nodes is not None
-    n = n_nodes
-    mp = max_passes if max_passes is not None else max_passes_bound(n, eps)
-    policy = AtLeastKFraction(k=k, eps=eps, min_deg_fallback=False, ceil_count=True)
-    backend = MeshSegmentSumBackend(axes)
-
-    def peel_local(src, dst, weight, mask):
-        return run_peel(_local_edges(src, dst, weight, mask, n), policy, backend, mp)
-
-    sharded = shard_map(
-        peel_local,
-        mesh=mesh,
-        in_specs=(P(axes),) * 4,
-        out_specs=P(),
-        check_vma=False,
+    problem = Problem.at_least_k(
+        k=k,
+        eps=eps,
+        max_passes=max_passes,
+        substrate="mesh",
+        edge_axes=tuple(edge_axes),
+        min_deg_fallback=False,
+        ceil_count=True,
     )
-    return jax.jit(sharded)
+    return default_solver.mesh_program(problem, mesh, n_nodes)
 
 
 def make_distributed_directed_peel(
@@ -345,26 +324,21 @@ def make_distributed_directed_peel(
     max_passes: Optional[int] = None,
     n_nodes: Optional[int] = None,
 ):
-    """Distributed Algorithm 3 (directed) for a traced ratio c.
+    """Distributed Algorithm 3 (directed) for a runtime ratio c.
 
     Returns fn(src, dst, weight, mask, c) -> (best_s, best_t, rho, passes).
     """
-    axes = tuple(edge_axes)
     assert n_nodes is not None
-    n = n_nodes
-    mp = max_passes if max_passes is not None else 2 * max_passes_bound(n, eps)
-    backend = MeshSegmentSumBackend(axes)
+    problem = Problem.directed(
+        eps=eps,
+        max_passes=max_passes,
+        substrate="mesh",
+        edge_axes=tuple(edge_axes),
+    )
+    fn = default_solver.mesh_program(problem, mesh, n_nodes)
 
-    def peel_local(src, dst, weight, mask, c):
-        policy = DirectedST(eps=eps, c=c)
-        out = run_peel(_local_edges(src, dst, weight, mask, n), policy, backend, mp)
+    def run(src, dst, weight, mask, c):
+        out = fn(src, dst, weight, mask, c)
         return out.best_alive, out.best_t, out.best_density, out.passes
 
-    sharded = shard_map(
-        peel_local,
-        mesh=mesh,
-        in_specs=(P(axes),) * 4 + (P(),),
-        out_specs=(P(), P(), P(), P()),
-        check_vma=False,
-    )
-    return jax.jit(sharded)
+    return run

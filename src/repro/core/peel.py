@@ -1,8 +1,10 @@
 """Algorithm 1 — (2+2eps)-approximate densest subgraph for undirected graphs.
 
-Thin wrapper over the PeelEngine (core/engine.py): Algorithm 1 is the
-``UndirectedThreshold`` policy on the exact segment-sum backend, jitted as a
-single ``lax.while_loop`` program.  A ``degree_fn`` hook lets the
+Thin delegation through the front door (core/api.py): Algorithm 1 is
+``Problem.undirected(eps)`` lowered onto the ``UndirectedThreshold`` policy
+and the exact segment-sum backend, jitted as a single ``lax.while_loop``
+program and memoized by the default :class:`~repro.core.api.Solver` so
+repeated same-shape calls never retrace.  A ``degree_fn`` hook lets the
 Count-Sketch (§5.1) and Pallas tiled-degree backends reuse the identical
 loop via :class:`repro.core.engine.FnBackend`.
 
@@ -15,53 +17,45 @@ has deg_S(i) <= 2(1+eps) rho(S)) and guarantees progress.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Optional
 
 import jax
 
-from repro.core.density import exact_degrees, max_passes_bound
-from repro.core.engine import (
-    FnBackend,
-    PeelOutcome,
-    UndirectedThreshold,
-    run_peel,
+from repro.core.api import (
+    DenseSubgraphResult,
+    Problem,
+    deprecated_alias_getattr,
+    solve,
 )
+from repro.core.density import exact_degrees
 from repro.graph.edgelist import EdgeList
-
-# The engine outcome IS the public result type (best_alive, best_density,
-# passes, history_*) — kept under the historical name.
-PeelResult = PeelOutcome
 
 
 def _default_degree_fn(edges: EdgeList, w_alive: jax.Array) -> jax.Array:
     return exact_degrees(edges, w_alive)
 
 
-@partial(jax.jit, static_argnames=("eps", "max_passes", "degree_fn", "track_history"))
 def densest_subgraph(
     edges: EdgeList,
     eps: float = 0.5,
     max_passes: Optional[int] = None,
     degree_fn: Callable[[EdgeList, jax.Array], jax.Array] = _default_degree_fn,
     track_history: bool = True,
-) -> PeelResult:
+) -> DenseSubgraphResult:
     """Runs Algorithm 1 and returns the best intermediate subgraph."""
-    if max_passes is None:
-        max_passes = max_passes_bound(edges.n_nodes, eps)
-    return run_peel(
-        edges,
-        UndirectedThreshold(eps),
-        FnBackend(degree_fn),
-        max_passes,
-        track_history=track_history,
+    problem = Problem.undirected(
+        eps=eps, max_passes=max_passes, track_history=track_history
     )
+    hook = None if degree_fn is _default_degree_fn else degree_fn
+    return solve(edges, problem, degree_fn=hook)
 
 
 def densest_subgraph_sets(edges: EdgeList, eps: float = 0.5, **kw):
     """Convenience host-side wrapper returning (node_index_array, density)."""
-    import numpy as np
-
     res = densest_subgraph(edges, eps=eps, **kw)
-    alive = np.asarray(res.best_alive)
-    return np.nonzero(alive)[0], float(res.best_density)
+    return res.nodes(), float(res.best_density)
+
+
+__getattr__ = deprecated_alias_getattr(
+    __name__, {"PeelResult": DenseSubgraphResult}
+)

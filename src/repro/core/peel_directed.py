@@ -1,50 +1,63 @@
 """Algorithm 3 — (2+2eps)-approximate densest subgraph for directed graphs.
 
-Thin wrapper over the PeelEngine: the ``DirectedST`` policy (dual S/T
-bitmaps; when |S|/|T| >= c it peels S by out-degree into T, otherwise peels
-T by in-degree from S — the paper's simplified size-based choice, §4.3) on
-the exact backend.  A geometric grid of c values (resolution delta) costs at
-most an extra delta factor in the approximation (§6.4);
-``densest_directed_search`` runs the grid, and because c enters the policy
-as a traced scalar the whole grid also batches under ``vmap``.
+Thin delegation through the front door (core/api.py): ``Problem.directed``
+lowers onto the ``DirectedST`` policy (dual S/T bitmaps; when |S|/|T| >= c
+it peels S by out-degree into T, otherwise peels T by in-degree from S — the
+paper's simplified size-based choice, §4.3) on the exact backend.  A
+geometric grid of c values (resolution delta) costs at most an extra delta
+factor in the approximation (§6.4); ``c=None`` runs the grid through ONE
+cached compiled program (c enters as a runtime scalar), and
+``densest_directed_search_vmapped`` batches the whole grid as one XLA
+program via ``solve_batch``.
 """
 
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.density import max_passes_bound
-from repro.core.engine import DirectedST, ExactBackend, PeelOutcome, run_peel
+from repro.core.api import (
+    DenseSubgraphResult,
+    Problem,
+    c_grid,
+    deprecated_alias_getattr,
+    run_cell,
+    solve,
+    solve_batch,
+)
 from repro.graph.edgelist import EdgeList
 
-DirectedPeelResult = PeelOutcome  # best_s / best_t / best_density / passes
+__all__ = [
+    "c_grid",
+    "densest_directed_search",
+    "densest_directed_search_vmapped",
+    "densest_subgraph_directed",
+]
 
 
-@partial(jax.jit, static_argnames=("eps", "max_passes"))
 def densest_subgraph_directed(
     edges: EdgeList,
     c: jax.Array | float,
     eps: float = 0.5,
     max_passes: Optional[int] = None,
-) -> DirectedPeelResult:
-    """Algorithm 3 for one value of c (c may be a traced scalar)."""
-    if max_passes is None:
-        # Either |S| or |T| shrinks by 1/(1+eps) per pass (Lemma 13).
-        max_passes = 2 * max_passes_bound(edges.n_nodes, eps)
-    policy = DirectedST(eps=eps, c=jnp.asarray(c, jnp.float32))
-    return run_peel(edges, policy, ExactBackend(), max_passes)
+):
+    """Algorithm 3 for one value of c (c may be a traced scalar).
 
-
-def c_grid(n_nodes: int, delta: float = 2.0) -> np.ndarray:
-    """Geometric grid of c = |S|/|T| guesses: delta^j covering [1/n, n]."""
-    j_max = int(math.ceil(math.log(max(n_nodes, 2)) / math.log(delta)))
-    return np.asarray([delta**j for j in range(-j_max, j_max + 1)], np.float32)
+    With a concrete c this routes through the cached front door and returns
+    a :class:`DenseSubgraphResult`; with a TRACED c (inside jit/vmap) it
+    returns the engine's raw ``PeelOutcome`` — same arrays, but no
+    ``provenance``/``extras``/host helpers on that branch."""
+    if isinstance(c, jax.core.Tracer):
+        # Inside jit/vmap (e.g. a vmapped c-grid): stay on the pure lowering
+        # path; the caller owns the compilation.
+        prob = Problem.directed(eps=eps, max_passes=max_passes)
+        return run_cell(edges, prob, c=c)
+    return solve(
+        edges, Problem.directed(c=float(c), eps=eps, max_passes=max_passes)
+    )
 
 
 def densest_directed_search(
@@ -56,20 +69,14 @@ def densest_directed_search(
     """Grid search over c (the paper's practical recipe).
 
     Returns (result, best_c, per_c_densities, per_c_passes).  One compilation
-    is reused across all c values because c enters as a traced scalar.
+    is reused across all c values because c enters as a runtime scalar.
     """
-    best = None
-    best_c = None
-    rhos = []
-    passes = []
-    for c in c_grid(edges.n_nodes, delta):
-        r = densest_subgraph_directed(edges, float(c), eps=eps, max_passes=max_passes)
-        rho = float(r.best_density)
-        rhos.append(rho)
-        passes.append(int(r.passes))
-        if best is None or rho > float(best.best_density):
-            best, best_c = r, float(c)
-    return best, best_c, np.asarray(rhos), np.asarray(passes)
+    res = solve(
+        edges,
+        Problem.directed(c=None, eps=eps, c_delta=delta, max_passes=max_passes),
+    )
+    ex = res.extras
+    return res, ex["best_c"], np.asarray(ex["c_density"]), np.asarray(ex["c_passes"])
 
 
 def densest_directed_search_vmapped(
@@ -78,7 +85,7 @@ def densest_directed_search_vmapped(
     delta: float = 2.0,
     max_passes: Optional[int] = None,
 ):
-    """The whole c grid in ONE compiled program via vmap (beyond-paper).
+    """The whole c grid in ONE compiled program via solve_batch (beyond-paper).
 
     The paper evaluates c values as separate runs (~35 min/c on Hadoop for
     TWITTER); c enters Algorithm 3 only through the peel-S-or-T branch, so
@@ -90,12 +97,22 @@ def densest_directed_search_vmapped(
 
     Returns (best_c, best_rho, rhos[n_c], passes[n_c]).
     """
-    cs = jnp.asarray(c_grid(edges.n_nodes, delta))
-
-    def one(c):
-        r = densest_subgraph_directed(edges, c, eps=eps, max_passes=max_passes)
-        return r.best_density, r.passes
-
-    rhos, passes = jax.jit(jax.vmap(one))(cs)
+    cs = c_grid(edges.n_nodes, delta)
+    res = solve_batch(
+        edges,
+        Problem.directed(eps=eps, max_passes=max_passes),
+        c=jnp.asarray(cs),
+    )
+    rhos = res.best_density
     best_i = int(jnp.argmax(rhos))
-    return float(cs[best_i]), float(rhos[best_i]), np.asarray(rhos), np.asarray(passes)
+    return (
+        float(cs[best_i]),
+        float(rhos[best_i]),
+        np.asarray(rhos),
+        np.asarray(res.passes),
+    )
+
+
+__getattr__ = deprecated_alias_getattr(
+    __name__, {"DirectedPeelResult": DenseSubgraphResult}
+)

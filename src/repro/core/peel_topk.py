@@ -1,41 +1,36 @@
 """Algorithm 2 — (3+3eps)-approximate densest subgraph of size >= k.
 
-Thin wrapper over the PeelEngine: the ``AtLeastKFraction`` policy (remove
-only |A(S)| = eps/(1+eps) |S| lowest-degree candidates per pass, a
-deterministic choice of the subset the paper leaves free) on the exact
-backend.  Inequality (4.2) guarantees the candidate set is large enough;
-only sets with |S| >= k are eligible as the answer and the loop stops once
-|S| < k (Lemma 11).
+Thin delegation through the front door (core/api.py): ``Problem.at_least_k``
+lowers onto the ``AtLeastKFraction`` policy (remove only
+|A(S)| = eps/(1+eps) |S| lowest-degree candidates per pass, a deterministic
+choice of the subset the paper leaves free) on the exact backend.
+Inequality (4.2) guarantees the candidate set is large enough; only sets
+with |S| >= k are eligible as the answer and the loop stops once |S| < k
+(Lemma 11).
 """
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
-import jax
-
-from repro.core.density import max_passes_bound
-from repro.core.engine import (
-    AtLeastKFraction,
-    ExactBackend,
-    PeelOutcome,
-    run_peel,
+from repro.core.api import (
+    DenseSubgraphResult,
+    Problem,
+    deprecated_alias_getattr,
+    solve,
 )
 from repro.graph.edgelist import EdgeList
 
-PeelTopKResult = PeelOutcome  # best_alive / best_density / best_size / passes
 
-
-@partial(jax.jit, static_argnames=("k", "eps", "max_passes"))
 def densest_subgraph_at_least_k(
     edges: EdgeList,
     k: int,
     eps: float = 0.5,
     max_passes: Optional[int] = None,
-) -> PeelTopKResult:
-    if max_passes is None:
-        max_passes = max_passes_bound(edges.n_nodes, eps)
-    return run_peel(
-        edges, AtLeastKFraction(k=k, eps=eps), ExactBackend(), max_passes
-    )
+) -> DenseSubgraphResult:
+    return solve(edges, Problem.at_least_k(k=k, eps=eps, max_passes=max_passes))
+
+
+__getattr__ = deprecated_alias_getattr(
+    __name__, {"PeelTopKResult": DenseSubgraphResult}
+)

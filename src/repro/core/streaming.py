@@ -35,14 +35,17 @@ Chunk = Tuple[np.ndarray, np.ndarray, np.ndarray]  # (src, dst, weight)
 
 
 @jax.jit
-def _chunk_stats(src, dst, w, alive, n_nodes_arr):
-    """Partial (degree vector, total weight) for one edge chunk."""
+def _chunk_stats(src, dst, w, alive):
+    """Partial (degree vector, total weight) for one edge chunk.
+
+    Accumulates in float32 regardless of the incoming weight dtype so the
+    chunk reduction is stable for low-precision edge streams (bf16/f16
+    weights) and identical across chunkings."""
     n = alive.shape[0]
     ok = alive[src] & alive[dst]
-    w_alive = jnp.where(ok, w, 0.0)
+    w_alive = jnp.where(ok, w.astype(jnp.float32), jnp.float32(0.0))
     deg = jax.ops.segment_sum(w_alive, src, num_segments=n)
     deg = deg + jax.ops.segment_sum(w_alive, dst, num_segments=n)
-    del n_nodes_arr
     return deg, jnp.sum(w_alive)
 
 
@@ -135,7 +138,6 @@ class StreamingDensest:
         speculatively re-issued.  Reductions are order-independent.
         """
         alive = jnp.asarray(alive_np)
-        n_arr = jnp.zeros(())
         chunks = list(self.chunk_stream())
         deg = np.zeros(self.n_nodes, np.float32)
         total = 0.0
@@ -145,9 +147,7 @@ class StreamingDensest:
         def work(idx: int) -> int:
             t0 = time.perf_counter()
             s, d, w = chunks[idx]
-            dd, tt = _chunk_stats(
-                jnp.asarray(s), jnp.asarray(d), jnp.asarray(w), alive, n_arr
-            )
+            dd, tt = _chunk_stats(jnp.asarray(s), jnp.asarray(d), jnp.asarray(w), alive)
             out = (np.asarray(dd), float(tt))
             with lock:
                 if idx not in done:  # first completion wins (idempotent)

@@ -1,0 +1,474 @@
+"""Front-door redesign tests (core/api.py).
+
+Three guarantees:
+  1. EQUIVALENCE MATRIX — ``solve()`` is bit-identical to every legacy entry
+     point (and to a direct engine lowering) across the policy × backend ×
+     substrate cells.
+  2. BATCHING — ``solve_batch`` (multi-eps / multi-c / stacked graphs) is
+     bit-identical to a Python loop of per-item ``solve`` calls and runs as
+     ONE traced program.
+  3. CACHING — a repeated same-shape ``solve`` hits the Solver's program
+     cache and does not retrace.
+
+eps values in batched comparisons are f32-exact (dyadic) so that the python
+float scalar folding of the unbatched path and the traced-f32 arithmetic of
+the vmapped path agree to the bit.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import (
+    DenseSubgraphResult,
+    Problem,
+    Solver,
+    StreamingDensest,
+    chunked_from_arrays,
+    densest_directed_search,
+    densest_subgraph,
+    densest_subgraph_at_least_k,
+    densest_subgraph_directed,
+    densest_subgraph_distributed,
+    densest_subgraph_sketched,
+    solve,
+    solve_batch,
+)
+from repro.core.engine import (
+    AtLeastKFraction,
+    DirectedST,
+    ExactBackend,
+    UndirectedThreshold,
+    run_peel,
+)
+from repro.graph.edgelist import EdgeList
+from repro.graph.generators import (
+    directed_planted,
+    erdos_renyi,
+    planted_dense_subgraph,
+)
+
+
+def _und():
+    return planted_dense_subgraph(260, avg_deg=4, k=25, p_dense=0.8, seed=3)[0]
+
+
+def _dir():
+    return directed_planted(200, avg_deg=3, ks=15, kt=12, p_dense=0.9, seed=5)[0]
+
+
+def _same(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _same_result(r, l):
+    """Bit-identical best set / density / passes (and T side if present)."""
+    _same(r.best_alive, l.best_alive)
+    assert float(r.best_density) == float(l.best_density)
+    assert int(r.passes) == int(l.passes)
+    assert int(r.best_size) == int(l.best_size)
+    if np.asarray(r.best_t).size:
+        _same(r.best_t, l.best_t)
+
+
+# ---------------------------------------------------------------------------
+# 1. Equivalence matrix: solve() vs legacy entry points and direct lowering
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("eps", [0.1, 0.5])
+def test_solve_undirected_matches_legacy_and_engine(eps):
+    edges = _und()
+    r = solve(edges, Problem.undirected(eps=eps, track_history=True))
+    legacy = densest_subgraph(edges, eps=eps)
+    _same_result(r, legacy)
+    _same(r.history_n, legacy.history_n)
+    # Independent lowering straight onto the engine.
+    mp = Problem.undirected(eps=eps).resolved_max_passes(edges.n_nodes)
+    ref = jax.jit(
+        lambda e: run_peel(
+            e, UndirectedThreshold(eps), ExactBackend(), mp, track_history=True
+        )
+    )(edges)
+    _same_result(r, ref)
+    assert r.provenance.backend == "exact"
+    assert r.provenance.substrate == "jit"
+
+
+@pytest.mark.parametrize("variant", ["floor_fallback", "ceil_plain"])
+def test_solve_at_least_k_matches_legacy_and_engine(variant):
+    edges = _und()
+    k, eps = 30, 0.5
+    fallback = variant == "floor_fallback"
+    prob = Problem.at_least_k(
+        k=k, eps=eps, min_deg_fallback=fallback, ceil_count=not fallback
+    )
+    r = solve(edges, prob)
+    mp = prob.resolved_max_passes(edges.n_nodes)
+    ref = jax.jit(
+        lambda e: run_peel(
+            e,
+            AtLeastKFraction(
+                k=k, eps=eps, min_deg_fallback=fallback, ceil_count=not fallback
+            ),
+            ExactBackend(),
+            mp,
+        )
+    )(edges)
+    _same_result(r, ref)
+    if fallback:  # the single-device legacy realization
+        _same_result(r, densest_subgraph_at_least_k(edges, k=k, eps=eps))
+
+
+@pytest.mark.parametrize("c", [0.5, 1.0, 2.0])
+def test_solve_directed_matches_legacy_and_engine(c):
+    edges = _dir()
+    eps = 0.5
+    prob = Problem.directed(c=c, eps=eps)
+    r = solve(edges, prob)
+    _same_result(r, densest_subgraph_directed(edges, c=c, eps=eps))
+    mp = prob.resolved_max_passes(edges.n_nodes)
+    ref = jax.jit(
+        lambda e: run_peel(
+            e, DirectedST(eps=eps, c=jnp.float32(c)), ExactBackend(), mp
+        )
+    )(edges)
+    _same_result(r, ref)
+
+
+def test_solve_directed_grid_matches_legacy_search():
+    edges = _dir()
+    r = solve(edges, Problem.directed(c=None, eps=0.5))
+    legacy, best_c, rhos, passes = densest_directed_search(edges, eps=0.5)
+    assert r.extras["best_c"] == best_c
+    np.testing.assert_array_equal(r.extras["c_density"], rhos)
+    np.testing.assert_array_equal(r.extras["c_passes"], passes)
+    _same_result(r, legacy)
+
+
+def test_solve_sketch_matches_legacy_sketched():
+    edges = _und()
+    t, b, seed = 5, 1 << 12, 7
+    prob = Problem.undirected(
+        eps=0.5, backend="sketch", sketch_tables=t, sketch_buckets=b,
+        sketch_seed=seed, track_history=True,
+    )
+    r = solve(edges, prob)
+    _same_result(r, densest_subgraph_sketched(edges, eps=0.5, t=t, b=b, seed=seed))
+    assert r.provenance.backend == "sketch"
+
+
+def test_solve_pallas_matches_exact():
+    edges = erdos_renyi(300, avg_deg=6, seed=4)
+    rp = solve(
+        edges, Problem.undirected(eps=0.5, backend="pallas", tile_size=128, tile_block=128)
+    )
+    re = solve(edges, Problem.undirected(eps=0.5))
+    _same_result(rp, re)  # tiled degrees are exact arithmetic
+    assert rp.provenance.backend == "pallas"
+
+
+def test_solve_mesh_matches_jit():
+    edges = _und()
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    rm = solve(edges, Problem.undirected(eps=0.5, substrate="mesh"), mesh=mesh)
+    rj = solve(edges, Problem.undirected(eps=0.5))
+    _same_result(rm, rj)
+    _same_result(rm, densest_subgraph_distributed(edges, mesh, ("data",), eps=0.5))
+    assert rm.provenance.substrate == "mesh"
+
+
+def test_solve_streaming_matches_jit_and_driver():
+    edges = _und()
+    rs = solve(
+        edges,
+        Problem.undirected(eps=0.5, substrate="streaming", stream_chunk=257,
+                           stream_workers=2),
+    )
+    rj = solve(edges, Problem.undirected(eps=0.5))
+    _same(rs.best_alive, rj.best_alive)
+    assert float(rs.best_density) == pytest.approx(float(rj.best_density), rel=1e-5)
+    assert int(rs.passes) == int(rj.passes)
+    # And it is the same driver the legacy entry point runs.
+    mask = np.asarray(edges.mask)
+    st = StreamingDensest(
+        chunked_from_arrays(
+            np.asarray(edges.src)[mask], np.asarray(edges.dst)[mask],
+            np.asarray(edges.weight)[mask], chunk=257,
+        ),
+        n_nodes=edges.n_nodes, eps=0.5, n_workers=2,
+    ).run(resume=False)
+    _same(rs.best_alive, st.best_alive)
+    assert float(rs.best_density) == pytest.approx(st.best_rho, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 2. solve_batch == loop of per-item solve, in one traced program
+# ---------------------------------------------------------------------------
+
+
+def test_solve_batch_eps_matches_loop():
+    edges = _und()
+    grid = [0.125, 0.25, 0.5, 1.0]  # f32-exact eps values
+    prob = Problem.undirected(max_passes=48, track_history=True)
+    s = Solver()
+    rb = s.solve_batch(edges, prob, eps=grid)
+    assert rb.provenance.batch == "eps"
+    assert rb.best_alive.shape == (len(grid), edges.n_nodes)
+    for i, e in enumerate(grid):
+        ri = s.solve(edges, Problem.undirected(eps=e, max_passes=48, track_history=True))
+        _same(rb.best_alive[i], ri.best_alive)
+        assert float(rb.best_density[i]) == float(ri.best_density)
+        assert int(rb.passes[i]) == int(ri.passes)
+        _same(rb.history_n[i], ri.history_n)
+
+
+def test_solve_batch_eps_at_least_k_matches_loop():
+    edges = _und()
+    grid = [0.25, 0.5, 1.0]
+    s = Solver()
+    rb = s.solve_batch(edges, Problem.at_least_k(k=30, max_passes=48), eps=grid)
+    for i, e in enumerate(grid):
+        ri = s.solve(edges, Problem.at_least_k(k=30, eps=e, max_passes=48))
+        _same(rb.best_alive[i], ri.best_alive)
+        assert float(rb.best_density[i]) == float(ri.best_density)
+
+
+def test_solve_batch_c_matches_loop():
+    edges = _dir()
+    cs = [0.5, 1.0, 2.0, 4.0]
+    s = Solver()
+    rb = s.solve_batch(edges, Problem.directed(eps=0.5, max_passes=48), c=cs)
+    assert rb.provenance.batch == "c"
+    for i, c in enumerate(cs):
+        ri = s.solve(edges, Problem.directed(c=c, eps=0.5, max_passes=48))
+        _same(rb.best_alive[i], ri.best_alive)
+        _same(rb.best_t[i], ri.best_t)
+        assert float(rb.best_density[i]) == float(ri.best_density)
+        assert int(rb.passes[i]) == int(ri.passes)
+
+
+def test_solve_batch_graphs_matches_loop():
+    g1 = erdos_renyi(250, avg_deg=6, seed=4)
+    perm = np.random.default_rng(1).permutation(g1.src.shape[0])
+    g2 = EdgeList(
+        src=g1.src[perm], dst=g1.dst[perm], weight=g1.weight[perm],
+        mask=g1.mask[perm], n_nodes=g1.n_nodes,
+    )
+    prob = Problem.undirected(eps=0.5, max_passes=32)
+    s = Solver()
+    rb = s.solve_batch([g1, g2], prob)
+    assert rb.provenance.batch == "graphs"
+    for i, g in enumerate((g1, g2)):
+        ri = s.solve(g, prob)
+        _same(rb.best_alive[i], ri.best_alive)
+        assert float(rb.best_density[i]) == float(ri.best_density)
+
+
+def test_solve_batch_is_one_program():
+    """A 4-point eps sweep traces exactly once (one XLA program)."""
+    edges = _und()
+    s = Solver()
+    s.solve_batch(edges, Problem.undirected(max_passes=32), eps=[0.25, 0.5, 1.0, 2.0])
+    assert s.trace_count == 1
+    assert s.cache_misses == 1
+    # Same-shape re-run: cache hit, still no retrace.
+    s.solve_batch(edges, Problem.undirected(max_passes=32), eps=[0.25, 0.5, 1.0, 2.0])
+    assert s.trace_count == 1
+    assert s.cache_hits == 1
+
+
+def test_solve_batch_needs_exactly_one_axis():
+    edges = _und()
+    with pytest.raises(ValueError):
+        solve_batch(edges, Problem.undirected())
+    with pytest.raises(ValueError):
+        solve_batch(edges, Problem.directed(c=1.0), eps=[0.5], c=[1.0])
+
+
+# ---------------------------------------------------------------------------
+# 3. Compile caching: repeated same-shape solves never retrace
+# ---------------------------------------------------------------------------
+
+
+def test_solver_cache_no_retrace_same_shape():
+    edges = _und()
+    perm = np.random.default_rng(0).permutation(edges.src.shape[0])
+    other = EdgeList(
+        src=edges.src[perm], dst=edges.dst[perm], weight=edges.weight[perm],
+        mask=edges.mask[perm], n_nodes=edges.n_nodes,
+    )
+    s = Solver()
+    prob = Problem.undirected(eps=0.5)
+    s.solve(edges, prob)
+    assert (s.trace_count, s.cache_misses, s.cache_hits) == (1, 1, 0)
+    s.solve(other, prob)  # same shapes, different data
+    assert (s.trace_count, s.cache_misses, s.cache_hits) == (1, 1, 1)
+    s.solve(edges, prob)
+    assert (s.trace_count, s.cache_misses, s.cache_hits) == (1, 1, 2)
+    # A different static field is a different program.
+    s.solve(edges, Problem.undirected(eps=0.25))
+    assert s.cache_misses == 2 and s.trace_count == 2
+
+
+def test_solve_batch_eps_keys_fixed_directed_c():
+    """eps-sweep programs bake the fixed directed c into the closure, so a
+    different c must be a cache MISS (regression: c was excluded from every
+    key and the second c silently reused the first c's program)."""
+    edges = _dir()
+    s = Solver()
+    r1 = s.solve_batch(edges, Problem.directed(c=1.0, max_passes=48), eps=[0.5])
+    r8 = s.solve_batch(edges, Problem.directed(c=8.0, max_passes=48), eps=[0.5])
+    assert s.cache_misses == 2
+    for c, rb in ((1.0, r1), (8.0, r8)):
+        ri = s.solve(edges, Problem.directed(c=c, eps=0.5, max_passes=48))
+        _same(rb.best_alive[0], ri.best_alive)
+        assert float(rb.best_density[0]) == float(ri.best_density)
+
+
+def test_solve_batch_accepts_prestacked_edgelist():
+    from repro.core import stack_graphs
+
+    g1 = erdos_renyi(250, avg_deg=6, seed=4)
+    perm = np.random.default_rng(1).permutation(g1.src.shape[0])
+    g2 = EdgeList(
+        src=g1.src[perm], dst=g1.dst[perm], weight=g1.weight[perm],
+        mask=g1.mask[perm], n_nodes=g1.n_nodes,
+    )
+    prob = Problem.undirected(eps=0.5, max_passes=32)
+    s = Solver()
+    rb = s.solve_batch(stack_graphs([g1, g2]), prob)
+    for i, g in enumerate((g1, g2)):
+        _same(rb.best_alive[i], s.solve(g, prob).best_alive)
+
+
+def test_cache_ignores_fields_the_program_never_reads():
+    """Knobs of cells that are not running (streaming params on a jit solve,
+    tile params on an exact backend) must not force a recompile."""
+    edges = _und()
+    s = Solver()
+    s.solve(edges, Problem.undirected(eps=0.5))
+    s.solve(edges, Problem.undirected(eps=0.5, stream_workers=8, stream_chunk=64))
+    s.solve(edges, Problem.undirected(eps=0.5, tile_size=256, wire_dtype="bf16"))
+    s.solve(edges, Problem.undirected(eps=0.5, c_delta=3.0, sketch_buckets=1 << 8))
+    assert s.cache_misses == 1 and s.cache_hits == 3 and s.trace_count == 1
+
+
+def test_solve_rejects_silently_dropped_kwargs():
+    edges = _und()
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    with pytest.raises(ValueError):
+        solve(edges, Problem.undirected(substrate="mesh"), mesh=mesh,
+              degree_fn=lambda e, w: w)
+    with pytest.raises(ValueError):
+        solve(edges, Problem.undirected(), checkpoint_dir="/tmp/nope")
+
+
+def test_auto_substrate_without_mesh_is_jit():
+    """substrate='auto' with no mesh supplied must run (jit), whatever the
+    host device count."""
+    edges = _und()
+    r = solve(edges, Problem.undirected(substrate="auto"))
+    assert r.provenance.substrate == "jit"
+
+
+def test_c_delta_validated():
+    with pytest.raises(ValueError):
+        Problem.directed(c_delta=1.0)
+
+
+def test_auto_backend_resolves_exact_for_streaming():
+    """streaming + backend='auto' must pick the exact cell even above the
+    auto-sketch node threshold (the only cell the driver implements)."""
+    p = Problem.undirected(backend="auto", substrate="streaming").resolve(5_000_000)
+    assert p.backend == "exact"
+
+
+def test_solver_cache_directed_shares_program_across_c():
+    """c is a runtime scalar: the whole grid (and any fixed c) reuses ONE
+    compiled program — the paper's ~35-min-per-c cost collapses."""
+    edges = _dir()
+    s = Solver()
+    s.solve(edges, Problem.directed(c=1.0, eps=0.5))
+    s.solve(edges, Problem.directed(c=2.0, eps=0.5))
+    s.solve(edges, Problem.directed(c=None, eps=0.5))  # the full grid
+    assert s.trace_count == 1
+    assert s.cache_misses == 1
+    assert s.cache_hits == 2
+
+
+# ---------------------------------------------------------------------------
+# Result type and deprecation aliases
+# ---------------------------------------------------------------------------
+
+
+def test_result_is_pytree_with_static_provenance():
+    edges = _und()
+    r = solve(edges, Problem.undirected(eps=0.5))
+    jax.block_until_ready(r)
+    leaves = jax.tree_util.tree_leaves(r)
+    assert any(l.shape == (edges.n_nodes,) for l in leaves)
+    mapped = jax.tree_util.tree_map(lambda x: x, r)
+    assert mapped.provenance == r.provenance  # static metadata survives
+    assert r.nodes().size == int(r.best_size)
+    assert isinstance(r, DenseSubgraphResult)
+
+
+@pytest.mark.parametrize(
+    "module,name",
+    [
+        ("repro.core", "PeelResult"),
+        ("repro.core", "PeelTopKResult"),
+        ("repro.core", "DirectedPeelResult"),
+        ("repro.core.peel", "PeelResult"),
+        ("repro.core.peel_topk", "PeelTopKResult"),
+        ("repro.core.peel_directed", "DirectedPeelResult"),
+    ],
+)
+def test_deprecated_result_aliases_warn(module, name):
+    import importlib
+
+    mod = importlib.import_module(module)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        alias = getattr(mod, name)
+    assert alias is DenseSubgraphResult
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+
+
+def test_problem_validation():
+    with pytest.raises(ValueError):
+        Problem(objective="nope")
+    with pytest.raises(ValueError):
+        Problem(objective="at_least_k")  # k missing
+    with pytest.raises(ValueError):
+        Problem.directed(c=1.0, backend="pallas").resolve(100)
+    with pytest.raises(ValueError):
+        Problem.undirected(substrate="streaming", backend="sketch").resolve(100)
+    # auto axes resolve to concrete cells.
+    p = Problem.undirected(backend="auto", substrate="auto").resolve(100)
+    assert p.backend == "exact" and p.substrate in ("jit", "mesh")
+
+
+# ---------------------------------------------------------------------------
+# Satellite: streaming chunk reducer dtype stability
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_stats_accumulates_float32():
+    from repro.core.streaming import _chunk_stats
+
+    src = jnp.asarray([0, 1, 2, 0], jnp.int32)
+    dst = jnp.asarray([1, 2, 3, 2], jnp.int32)
+    alive = jnp.ones((4,), bool)
+    for dtype in (jnp.bfloat16, jnp.float16, jnp.float32):
+        deg, total = _chunk_stats(src, dst, jnp.ones((4,), dtype), alive)
+        assert deg.dtype == jnp.float32
+        assert total.dtype == jnp.float32
+        assert float(total) == 4.0
+        np.testing.assert_array_equal(np.asarray(deg), [2.0, 2.0, 3.0, 1.0])
