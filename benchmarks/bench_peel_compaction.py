@@ -1,0 +1,129 @@
+"""Compaction-runtime benchmark: passes x edge-slots-scanned and wall-clock
+for ``compaction in (off, twophase, geometric)`` on power-law graphs.
+
+This is the repo's first tracked perf-trajectory point for the peel hot
+path: the geometric ladder's claim is that pass k scans O(m_k) edge slots
+instead of O(m) (amortized O(m) total, the Lemma-4 shrink made operational),
+with bit-identical results.  Run with::
+
+    PYTHONPATH=src python -m benchmarks.bench_peel_compaction [--n 200000]
+
+Writes experiments/bench/BENCH_peel.json with, per eps:
+  * per-mode passes, total edge slots scanned, warm wall-clock (jit
+    substrate; ladder programs pre-compiled, min over repeats),
+  * slots/wall reduction factors vs 'off',
+  * a bit-identity flag (best_alive/best_density/passes equal across modes).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import Problem, Solver
+from repro.graph.generators import chung_lu_power_law
+
+
+def _timed(fn, repeats: int):
+    out = fn()  # warm: compiles every ladder rung once
+    jax.block_until_ready(out.best_alive)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out.best_alive)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--avg-deg", type=float, default=10.0)
+    ap.add_argument("--exponent", type=float, default=2.0)
+    ap.add_argument("--eps", type=float, nargs="+", default=[0.1, 0.5])
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument(
+        "--out", default=os.path.join("experiments", "bench", "BENCH_peel.json")
+    )
+    args = ap.parse_args(argv)
+
+    edges = chung_lu_power_law(
+        args.n, exponent=args.exponent, avg_deg=args.avg_deg, seed=0
+    )
+    m_pad = edges.n_edges_padded
+    report = {
+        "graph": {
+            "family": "chung_lu_power_law",
+            "n_nodes": args.n,
+            "n_edges": int(edges.num_real_edges()),
+            "n_edges_padded": m_pad,
+            "exponent": args.exponent,
+            "avg_deg": args.avg_deg,
+        },
+        "backend": "exact",
+        "substrate": "jit",
+        "platform": jax.default_backend(),
+        "eps": {},
+    }
+
+    for eps in args.eps:
+        solver = Solver()
+        rows = {}
+        ref = None
+        for mode in ("off", "twophase", "geometric"):
+            prob = Problem.undirected(eps=eps, compaction=mode)
+            wall, res = _timed(lambda p=prob: solver.solve(edges, p), args.repeats)
+            passes = int(res.passes)
+            if mode == "off":
+                slots = passes * m_pad
+                segments = 1
+            else:
+                lad = res.extras["compaction"]
+                slots = int(lad["edge_slots_scanned"])
+                segments = len(lad["segments"])
+            if ref is None:
+                ref = res
+                identical = True
+            else:
+                identical = (
+                    np.array_equal(
+                        np.asarray(res.best_alive), np.asarray(ref.best_alive)
+                    )
+                    and float(res.best_density) == float(ref.best_density)
+                    and int(res.passes) == int(ref.passes)
+                )
+            rows[mode] = {
+                "passes": passes,
+                "segments": segments,
+                "edge_slots_scanned": slots,
+                "wall_s": round(wall, 4),
+                "rho": round(float(res.best_density), 4),
+                "bit_identical_to_off": identical,
+            }
+            print(f"eps={eps} {mode}: {rows[mode]}")
+        off = rows["off"]
+        for mode in ("twophase", "geometric"):
+            rows[mode]["slots_reduction_x"] = round(
+                off["edge_slots_scanned"] / max(rows[mode]["edge_slots_scanned"], 1), 2
+            )
+            rows[mode]["wall_speedup_x"] = round(
+                off["wall_s"] / max(rows[mode]["wall_s"], 1e-9), 2
+            )
+        report["eps"][str(eps)] = rows
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -61,6 +61,7 @@ from repro.core.engine import (
     UndirectedThreshold,
     removal_threshold,
     run_peel,
+    segment_degree_count,
     undirected_pass_step,
 )
 from repro.core.exact import (
@@ -72,6 +73,7 @@ from repro.core.mapreduce import (
     densest_subgraph_distributed,
     make_distributed_directed_peel,
     make_distributed_peel,
+    make_distributed_peel_compacted,
     shard_edges,
 )
 from repro.core.peel import densest_subgraph, densest_subgraph_sets
@@ -130,11 +132,13 @@ __all__ = [
     "density_of",
     "make_distributed_directed_peel",
     "make_distributed_peel",
+    "make_distributed_peel_compacted",
     "make_sketch_params",
     "max_passes_bound",
     "query_degrees",
     "removal_threshold",
     "run_peel",
+    "segment_degree_count",
     "shard_edges",
     "sketch_degrees_from_edges",
     "sketch_endpoint_counters",

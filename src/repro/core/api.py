@@ -33,6 +33,8 @@ Lowering map (Problem field -> engine axis)::
     substrate  jit          -> jax.jit(run_peel)                  (peel*.py)
                mesh         -> shard_map + psum backends          (§5.2)
                streaming    -> StreamingDensest chunked driver    (§4, semi-streaming)
+    compaction geometric    -> Solver._run_compacted ladder       (amortized O(m))
+               twophase     -> same ladder, one fixed compaction  (legacy schedule)
 
 The legacy entry points (``densest_subgraph``, ``densest_subgraph_at_least_k``,
 ``densest_subgraph_directed``, ``densest_directed_search``,
@@ -64,6 +66,7 @@ from repro.core.engine import (
     run_peel,
 )
 from repro.graph.edgelist import EdgeList
+from repro.graph.partition import pow2_bucket
 
 __all__ = [
     "DenseSubgraphResult",
@@ -81,10 +84,19 @@ __all__ = [
 _OBJECTIVES = ("undirected", "at_least_k", "directed")
 _BACKENDS = ("exact", "sketch", "pallas", "auto")
 _SUBSTRATES = ("jit", "mesh", "streaming", "auto")
+_COMPACTIONS = ("off", "twophase", "geometric", "auto")
 
 # Above this node count, "auto" trades the O(n) exact degree vector for the
 # O(t*b) Count-Sketch (§5.1's memory regime).
 _AUTO_SKETCH_NODES = 1_000_000
+
+# Geometric compaction ladder: buffers shrink by gathering survivors into
+# the next power-of-two bucket (graph.partition.pow2_bucket); floors bound
+# the ladder depth (and keep the smallest compiled programs from being
+# degenerate).
+_COMPACT_MIN_EDGES = 256
+_COMPACT_MIN_NODES = 128
+_COMPACT_MAX_SEGMENTS = 64  # runaway guard; ladders are O(log m) deep
 
 
 # ---------------------------------------------------------------------------
@@ -103,6 +115,18 @@ class Problem:
     one device is visible, jit otherwise.  ``c=None`` with the directed
     objective means "search the geometric c-grid" (resolution ``c_delta``),
     the paper's practical recipe.
+
+    ``compaction`` is the engine's runtime-scheduling knob (amortized-O(m)
+    peeling): ``'geometric'`` runs the peel loop in segments and gathers
+    survivors (edges AND nodes) into the next power-of-two buffer whenever
+    the alive edge count falls below half the current padded buffer, so
+    pass k costs O(m_k) instead of O(m); ``'twophase'`` compacts exactly
+    once after ``twophase_passes`` passes (the historical
+    ``make_distributed_peel_twophase`` schedule); ``'auto'`` picks
+    geometric for the exact/pallas backends and off otherwise (Count-Sketch
+    degree estimates depend on node ids, so compaction would change them).
+    Compaction is pure renumbering: results are bit-identical to
+    ``'off'`` for integer-valued edge weights (e.g. unweighted graphs).
     """
 
     objective: str = "undirected"
@@ -114,6 +138,9 @@ class Problem:
     substrate: str = "jit"
     max_passes: Optional[int] = None  # None -> Lemma 4/13 bound
     track_history: bool = False
+    # Compaction runtime (host-side scheduling; never keys compiled programs).
+    compaction: str = "off"  # off | twophase | geometric | auto
+    twophase_passes: int = 8  # compaction='twophase': phase-1 pass budget
     # Algorithm 2 realization knobs (floor+fallback = single-device legacy,
     # ceil w/o fallback = distributed legacy).
     min_deg_fallback: bool = True
@@ -123,9 +150,12 @@ class Problem:
     sketch_buckets: int = 1 << 13
     sketch_seed: int = 0
     sketch_node_chunk: int = 1 << 20  # mesh sketch: query streaming chunk
-    # Pallas tiled-degree kernel parameters.
+    # Pallas tiled-degree kernel parameters.  ``pallas_interpret=None`` means
+    # "compiled on TPU, interpreter elsewhere" (kernels resolve it against
+    # jax.default_backend()); True forces interpret mode everywhere.
     tile_size: int = 1024
     tile_block: int = 512
+    pallas_interpret: Optional[bool] = None
     # Mesh substrate parameters.
     edge_axes: Tuple[str, ...] = ("data",)
     wire_dtype: str = "f32"  # f32 | bf16 degree-psum wire format
@@ -143,6 +173,14 @@ class Problem:
         if self.substrate not in _SUBSTRATES:
             raise ValueError(
                 f"substrate={self.substrate!r} not in {_SUBSTRATES}"
+            )
+        if self.compaction not in _COMPACTIONS:
+            raise ValueError(
+                f"compaction={self.compaction!r} not in {_COMPACTIONS}"
+            )
+        if self.twophase_passes < 1:
+            raise ValueError(
+                f"twophase_passes={self.twophase_passes} must be >= 1"
             )
         if self.objective == "at_least_k" and (self.k is None or self.k < 1):
             raise ValueError("objective='at_least_k' needs k >= 1")
@@ -192,11 +230,38 @@ class Problem:
             # node state, out-of-core edges): its only cell is exact.
             if substrate == "streaming":
                 backend = "exact"
+            elif self.compaction in ("geometric", "twophase"):
+                # An explicit compaction request constrains the resolution:
+                # sketch estimates hash node ids, so only exact-arithmetic
+                # backends can ride the ladder.
+                backend = "exact"
             else:
                 backend = "sketch" if n_nodes > _AUTO_SKETCH_NODES else "exact"
+        compaction = self.compaction
+        if compaction == "auto":
+            # Geometric compaction is pure renumbering for exact-arithmetic
+            # backends; Count-Sketch estimates hash node ids, so renumbering
+            # would change them — auto keeps sketch runs uncompacted.
+            compaction = "geometric" if backend in ("exact", "pallas") else "off"
         p = self
-        if backend != self.backend or substrate != self.substrate:
-            p = dataclasses.replace(self, backend=backend, substrate=substrate)
+        if (
+            backend != self.backend
+            or substrate != self.substrate
+            or compaction != self.compaction
+        ):
+            p = dataclasses.replace(
+                self, backend=backend, substrate=substrate, compaction=compaction
+            )
+        if p.compaction != "off" and p.backend == "sketch":
+            raise ValueError(
+                "compaction renumbers node ids, which changes Count-Sketch "
+                "degree estimates; backend='sketch' needs compaction='off'"
+            )
+        if p.compaction == "twophase" and p.substrate == "streaming":
+            raise ValueError(
+                "the streaming driver compacts geometrically; use "
+                "compaction='geometric' or 'off' with substrate='streaming'"
+            )
         if p.objective == "directed" and p.backend == "pallas":
             raise ValueError(
                 "the tiled-degree kernel counts both endpoints (undirected); "
@@ -240,6 +305,7 @@ class Provenance:
     max_passes: int
     batch: Optional[str] = None  # None | "eps" | "c" | "graphs"
     cache_hit: bool = False
+    compaction: str = "off"  # off | twophase | geometric (resolved)
 
 
 @jax.tree_util.register_dataclass
@@ -362,6 +428,7 @@ def _backend_for(
             return tiled_degrees(
                 tl, ei, w_alive,
                 tile_size=problem.tile_size, n_nodes=n_nodes,
+                interpret=problem.pallas_interpret,
             )
 
         return FnBackend(fn)
@@ -377,19 +444,33 @@ def run_cell(
     degree_fn: Optional[Callable] = None,
     tiling: Optional[Tuple[jax.Array, jax.Array]] = None,
     max_passes: Optional[int] = None,
+    init_alive: Optional[jax.Array] = None,
+    init_t_alive: Optional[jax.Array] = None,
+    init_t: Optional[jax.Array] = None,
+    init_best_empty: bool = False,
+    compact_below: Optional[int] = None,
+    init_alive_edges: Optional[jax.Array] = None,
+    init_ok_from_mask: bool = False,
 ) -> PeelOutcome:
     """The pure, traceable lowering core: one Problem cell -> ``run_peel``.
 
     Safe under jit/vmap/shard_map; ``eps`` and ``c`` may be traced scalars.
     Everything in solve()/solve_batch() and every legacy wrapper bottoms out
-    here (substrates add their own launch wrappers around it).
+    here (substrates add their own launch wrappers around it).  The
+    ``init_*``/``compact_below`` segment controls are forwarded to
+    :func:`~repro.core.engine.run_peel` — ``run_cell`` itself is always ONE
+    segment; the host-side compaction ladder around it lives in
+    :class:`Solver` (``Problem.compaction`` is ignored here).
     """
     prob = problem.resolve(edges.n_nodes)
     mp = max_passes if max_passes is not None else prob.resolved_max_passes(edges.n_nodes)
     policy = _policy_for(prob, eps=eps, c=c)
     backend = _backend_for(prob, edges.n_nodes, degree_fn=degree_fn, tiling=tiling)
     return run_peel(
-        edges, policy, backend, mp, track_history=prob.track_history
+        edges, policy, backend, mp, track_history=prob.track_history,
+        init_alive=init_alive, init_t_alive=init_t_alive, init_t=init_t,
+        init_best_empty=init_best_empty, compact_below=compact_below,
+        init_alive_edges=init_alive_edges, init_ok_from_mask=init_ok_from_mask,
     )
 
 
@@ -445,7 +526,7 @@ def deprecated_alias_getattr(module_name: str, aliases: Dict[str, Any]):
     return __getattr__
 
 
-def _tiling_arrays(edges: EdgeList, problem: Problem):
+def _tiling_arrays(edges: EdgeList, problem: Problem, pow2_pad: bool = False):
     """Host-side Pallas tile bucketing for this graph (runtime args of the
     cached program, so the compiled code is reusable across graphs).
 
@@ -453,11 +534,16 @@ def _tiling_arrays(edges: EdgeList, problem: Problem):
     the bucketing is not (it depends on edge CONTENT, which a shape-keyed
     cache cannot see).  For request-rate serving of one graph, bucket once
     and pass ``degree_fn=degree_fn_from_tiling(tiled)`` instead: the hook
-    keys the program cache by identity and skips the per-call rebuild."""
+    keys the program cache by identity and skips the per-call rebuild.
+
+    ``pow2_pad`` rounds the per-tile edge capacity up to a power of two so
+    the compaction ladder's re-bucketed tilings land on a bounded set of
+    shapes (one compile per bucket, reused across segments and graphs)."""
     from repro.kernels.peel_degree.ops import tiling_for_edges
 
     tiled = tiling_for_edges(
-        edges, tile_size=problem.tile_size, block=problem.tile_block
+        edges, tile_size=problem.tile_size, block=problem.tile_block,
+        pow2_pad=pow2_pad,
     )
     return jnp.asarray(tiled.target_local), jnp.asarray(tiled.edge_index)
 
@@ -465,6 +551,17 @@ def _tiling_arrays(edges: EdgeList, problem: Problem):
 # ---------------------------------------------------------------------------
 # Solver — compile caching + batched drivers
 # ---------------------------------------------------------------------------
+
+
+def _host_keep_going(prob: Problem, n_s: int, n_t: int) -> bool:
+    """Host mirror of the policies' ``keep_going`` tests, used by the
+    compaction scheduler to decide whether a segment ended by termination
+    or by hitting its compaction trigger."""
+    if prob.objective == "at_least_k":
+        return n_s >= int(prob.k)
+    if prob.objective == "directed":
+        return n_s > 0 and n_t > 0
+    return n_s > 0
 
 
 def _policy_name(problem: Problem) -> str:
@@ -537,9 +634,12 @@ class Solver:
         # eps-sweep programs — the eps/graphs sweeps bake a fixed directed c
         # into the closure, so c must key those) or when the resolved cell
         # never reads it (no spurious recompiles from irrelevant knobs).
-        exclude = {"max_passes", "c_delta"}  # host-side grid loop only
-        if kind in ("solve", "mesh", "c"):
-            exclude.add("c")
+        # compaction/twophase_passes are host-side scheduling: segment
+        # programs key on (seg max_passes, compact_below) via mp/aux instead,
+        # so geometric and twophase ladders share bucket programs.
+        exclude = {"max_passes", "c_delta", "compaction", "twophase_passes"}
+        if kind in ("solve", "mesh", "c", "cseg", "cseg_mesh"):
+            exclude.add("c")  # these programs take c as a runtime argument
         if kind == "eps":
             exclude.add("eps")
         if problem.objective != "at_least_k":
@@ -549,7 +649,7 @@ class Solver:
         if not (problem.backend == "sketch" and problem.substrate == "mesh"):
             exclude.add("sketch_node_chunk")
         if problem.backend != "pallas":
-            exclude |= {"tile_size", "tile_block"}
+            exclude |= {"tile_size", "tile_block", "pallas_interpret"}
         if problem.substrate != "mesh":
             exclude |= {"edge_axes", "wire_dtype"}
         # Programs are never built for the streaming substrate.
@@ -619,11 +719,63 @@ class Solver:
             raise ValueError(kind)
         return jax.jit(fn)
 
+    def _build_segment_program(
+        self,
+        problem: Problem,
+        seg_mp: int,
+        compact_below: Optional[int],
+        with_tiling: bool,
+    ) -> Callable:
+        """One rung of the compaction ladder on the jit substrate:
+        ``fn(edges[, tl, ei], alive0[, ta0], t0, ae0[, c]) -> PeelOutcome``.
+        ``compact_below`` is baked in statically (it derives from the edge
+        buffer size, which already keys the cache), so each power-of-two
+        bucket compiles exactly once and is reused across graphs, segments
+        and compaction modes.  ``ae0`` is the host-known alive-edge count
+        of the entry state and the entry filter is the edge mask itself
+        (a fresh bucket holds exactly the surviving alive edges), so a rung
+        does NO edge work beyond its passes."""
+        solver = self
+        directed = problem.objective == "directed"
+
+        def cell(edges, alive0, ta0, t0, ae0, c=None, tiling=None):
+            return run_cell(
+                edges, problem, c=c, tiling=tiling, max_passes=seg_mp,
+                init_alive=alive0, init_t_alive=ta0, init_t=t0,
+                init_best_empty=True, compact_below=compact_below,
+                init_alive_edges=ae0, init_ok_from_mask=True,
+            )
+
+        if with_tiling:
+            def fn(edges, tl, ei, alive0, t0, ae0):
+                solver._mark_trace()
+                return cell(edges, alive0, None, t0, ae0, tiling=(tl, ei))
+        elif directed:
+            def fn(edges, alive0, ta0, t0, ae0, c):
+                solver._mark_trace()
+                return cell(edges, alive0, ta0, t0, ae0, c=c)
+        else:
+            def fn(edges, alive0, t0, ae0):
+                solver._mark_trace()
+                return cell(edges, alive0, None, t0, ae0)
+        return jax.jit(fn)
+
     def _build_mesh_program(
-        self, problem: Problem, mp: int, mesh, n_nodes: int
+        self,
+        problem: Problem,
+        mp: int,
+        mesh,
+        n_nodes: int,
+        segment: bool = False,
+        compact_below: Optional[int] = None,
     ) -> Callable:
         """shard_map substrate (§5.2): edges sharded over ``edge_axes``,
-        node state replicated, one fused psum per pass."""
+        node state replicated, one fused psum per pass.  With ``segment``
+        the program is one rung of the compaction ladder — it takes the
+        replicated carried state (alive bitmap(s), absolute pass counter)
+        and stops at ``compact_below``; the alive-edge trigger count is
+        psummed (``MeshSegmentSumBackend.count_edges``) so all devices
+        agree on the segment boundary."""
         from jax.sharding import PartitionSpec as P
 
         from repro.compat import shard_map
@@ -647,14 +799,41 @@ class Solver:
         solver = self
         directed = problem.objective == "directed"
 
-        def _local_run(src, dst, weight, mask, c=None):
+        def _local_run(src, dst, weight, mask, c=None, **seg_kw):
             e = EdgeList(src=src, dst=dst, weight=weight, mask=mask, n_nodes=n_nodes)
             policy = _policy_for(problem, c=c)
             return run_peel(
-                e, policy, backend, mp, track_history=problem.track_history
+                e, policy, backend, mp, track_history=problem.track_history,
+                **seg_kw,
             )
 
-        if directed:
+        if segment:
+            # ae0 is the replicated host-known entry count; the entry filter
+            # is the (sharded) edge mask itself, so a rung starts without
+            # scanning its shard.
+            seg_static = dict(
+                init_best_empty=True, compact_below=compact_below,
+                init_ok_from_mask=True,
+            )
+            if directed:
+                def local(src, dst, weight, mask, alive0, ta0, t0, ae0, c):
+                    return _local_run(
+                        src, dst, weight, mask, c,
+                        init_alive=alive0, init_t_alive=ta0, init_t=t0,
+                        init_alive_edges=ae0, **seg_static,
+                    )
+
+                in_specs = (P(axes),) * 4 + (P(), P(), P(), P(), P())
+            else:
+                def local(src, dst, weight, mask, alive0, t0, ae0):
+                    return _local_run(
+                        src, dst, weight, mask,
+                        init_alive=alive0, init_t=t0,
+                        init_alive_edges=ae0, **seg_static,
+                    )
+
+                in_specs = (P(axes),) * 4 + (P(), P(), P())
+        elif directed:
             def local(src, dst, weight, mask, c):
                 return _local_run(src, dst, weight, mask, c)
 
@@ -696,6 +875,299 @@ class Solver:
         fn, _, _ = self._mesh_fn(problem.resolve(n_nodes), mesh, n_nodes)
         return fn
 
+    # -- compaction ladder (geometric | twophase) ---------------------------
+    def _segment_fn(
+        self,
+        prob: Problem,
+        seg_mp: int,
+        compact_below: Optional[int],
+        n_cur: int,
+        m_cur: int,
+        dtype,
+        tiling_shapes: Tuple,
+        mesh,
+    ):
+        """Cached program for one ladder rung (jit or mesh substrate)."""
+        if prob.substrate == "mesh":
+            key = self._key(
+                "cseg_mesh", prob, seg_mp, n_cur, -1, "sharded", None,
+                (mesh, compact_below),
+            )
+            return self._get(
+                key,
+                lambda: self._build_mesh_program(
+                    prob, seg_mp, mesh, n_cur,
+                    segment=True, compact_below=compact_below,
+                ),
+            )
+        with_tiling = prob.backend == "pallas"
+        key = self._key(
+            "cseg", prob, seg_mp, n_cur, m_cur, dtype, None,
+            (compact_below,) + tiling_shapes,
+        )
+        return self._get(
+            key,
+            lambda: self._build_segment_program(
+                prob, seg_mp, compact_below, with_tiling
+            ),
+        )
+
+    def _run_compacted(
+        self, graph: EdgeList, prob: Problem, mesh, c: Optional[float]
+    ) -> Tuple[PeelOutcome, Dict[str, Any], bool]:
+        """The geometric-compaction runtime: runs the SAME engine loop in
+        segments, gathering survivors (edges and nodes) into the next
+        power-of-two buffer whenever the alive edge count falls below half
+        the current padded buffer — pass k then scans O(m_k) edge slots
+        instead of O(m), amortized O(m) total (Lemma 4 drives the geometric
+        shrink; cf. the per-round compaction in Mitrović & Pan).
+
+        Compaction is pure renumbering (a stable gather over survivors), so
+        the pass-by-pass removal decisions — and therefore best set, best
+        density, final bitmaps, pass count and history — are bit-identical
+        to the uncompacted loop for integer-valued edge weights, and equal
+        up to float reassociation otherwise.  ``compaction='twophase'``
+        reuses the same machinery with a fixed schedule: one compaction
+        after ``twophase_passes`` passes (the historical
+        ``make_distributed_peel_twophase`` recipe).
+
+        Returns ``(outcome in the ORIGINAL id space, ladder report, all
+        segment programs were cache hits)``.
+        """
+        directed = prob.objective == "directed"
+        n0 = graph.n_nodes
+        mp = prob.resolved_max_passes(n0)
+        dtype = graph.weight.dtype
+        # Host-side buffers of the current rung (device arrays are rebuilt
+        # per segment; each rung is half the size, so total transfer/gather
+        # work telescopes to O(m)).
+        src = np.asarray(graph.src)
+        dst = np.asarray(graph.dst)
+        w = np.asarray(graph.weight)
+        msk = np.asarray(graph.mask)
+        id_map = np.arange(n0, dtype=np.int64)  # compact id -> original id
+        n_cur = n0
+        s_al = np.ones(n0, bool)
+        t_al = np.ones(n0, bool) if directed else None
+
+        hist_len = mp if prob.track_history else 1
+        hist_n = np.full(hist_len, -1, np.int32)
+        hist_m = np.zeros(hist_len, np.float32)
+        hist_rho = np.zeros(hist_len, np.float32)
+        best_rho = float("-inf")
+        # Seed the best set with S_0, matching the uncompacted loop's
+        # best0=alive0: if NO pass ever records an eligible set (zero-pass
+        # runs — k > n, max_passes=0), both paths return the full set.
+        best_alive = np.ones(n0, bool)
+        best_t = np.ones(n0, bool) if directed else None
+        best_size = 0
+        t_done = 0
+        segments = []
+        slots_scanned = 0
+        # Alive-edge count of the entry state of the NEXT rung: all real
+        # edges initially; the survivor count after each compaction.  Only
+        # read by rungs entered right after (re)initialization, where it is
+        # exact — terminal (compact_below=None) segments ignore it.
+        cur_alive_edges = int(msk.sum())
+        twophase = prob.compaction == "twophase"
+        # twophase_passes >= 1 is Problem-validated; mp=0 must stay 0 so a
+        # zero-budget run executes no passes, exactly like 'off'.
+        tp_k1 = min(int(prob.twophase_passes), mp)
+        no_more_compact = False
+        all_hit = True
+
+        for seg_idx in range(_COMPACT_MAX_SEGMENTS):
+            seg_mp = tp_k1 if (twophase and seg_idx == 0) else mp
+            compact_below = None
+            if prob.compaction == "geometric" and not no_more_compact:
+                compact_below = max(len(src) // 2, 1)
+
+            # ---- launch one segment on the current buffer ----
+            edges = EdgeList(
+                src=jnp.asarray(src), dst=jnp.asarray(dst),
+                weight=jnp.asarray(w), mask=jnp.asarray(msk),
+                n_nodes=n_cur, directed=graph.directed,
+            )
+            aux_arrays: Tuple = ()
+            if prob.backend == "pallas":
+                aux_arrays = _tiling_arrays(edges, prob, pow2_pad=True)
+            # Carried segment state, identical on both substrates (must
+            # track the _build_segment_program/_build_mesh_program
+            # signatures): alive bitmap(s), absolute pass counter, entry
+            # alive-edge count, and the runtime c for directed policies.
+            carried: Tuple = (jnp.asarray(s_al),)
+            if directed:
+                carried += (jnp.asarray(t_al),)
+            carried += (
+                jnp.asarray(t_done, jnp.int32),
+                jnp.asarray(cur_alive_edges, jnp.int32),
+            )
+            if directed:
+                carried += (jnp.float32(c),)
+            if prob.substrate == "mesh":
+                from repro.core.mapreduce import shard_edges
+
+                sh = shard_edges(edges, mesh, prob.edge_axes)
+                m_buf = sh.n_edges_padded
+                if compact_below is not None:
+                    compact_below = max(m_buf // 2, 1)
+                fn, hit = self._segment_fn(
+                    prob, seg_mp, compact_below, n_cur, m_buf, dtype, (), mesh
+                )
+                out = fn(sh.src, sh.dst, sh.weight, sh.mask, *carried)
+            else:
+                m_buf = edges.n_edges_padded
+                fn, hit = self._segment_fn(
+                    prob, seg_mp, compact_below, n_cur, m_buf, dtype,
+                    tuple(a.shape for a in aux_arrays), None,
+                )
+                out = fn(edges, *aux_arrays, *carried)
+            all_hit = all_hit and hit
+
+            # ---- fold the segment into the global answer ----
+            t_prev = t_done
+            t_done = int(out.passes)
+            s_al = np.asarray(out.alive)
+            if directed:
+                t_al = np.asarray(out.t_alive)
+            seg_rho = float(out.best_density)
+            if seg_rho > best_rho:  # strict: earliest pass wins ties, as in
+                best_rho = seg_rho  # the single-segment loop
+                ba = np.asarray(out.best_alive)
+                best_alive = np.zeros(n0, bool)
+                best_alive[id_map] = ba[: len(id_map)]
+                if directed:
+                    bt = np.asarray(out.best_t)
+                    best_t = np.zeros(n0, bool)
+                    best_t[id_map] = bt[: len(id_map)]
+                best_size = int(out.best_size)
+            if prob.track_history:
+                shn = np.asarray(out.history_n)
+                sel = shn >= 0
+                hist_n[: len(shn)][sel] = shn[sel]
+                hist_m[: len(shn)][sel] = np.asarray(out.history_m)[sel]
+                hist_rho[: len(shn)][sel] = np.asarray(out.history_rho)[sel]
+            seg_passes = t_done - t_prev
+            slots_scanned += seg_passes * m_buf
+            segments.append(
+                {
+                    "n_buf": int(n_cur),
+                    "m_buf": int(m_buf),
+                    "passes": int(seg_passes),
+                    "compact_below": compact_below,
+                    "cache_hit": bool(hit),
+                }
+            )
+
+            # ---- terminated? ----
+            n_s = int(s_al.sum())
+            n_t = int(t_al.sum()) if directed else n_s
+            if t_done >= mp or not _host_keep_going(prob, n_s, n_t):
+                break
+
+            # ---- compact survivors into the next bucket ----
+            surv = (s_al | t_al) if directed else s_al
+            ta_np = t_al if directed else s_al
+            ok_e = msk & s_al[src] & ta_np[dst]
+            e_alive = int(ok_e.sum())
+            n_alive = int(surv.sum())
+            new_m = pow2_bucket(max(e_alive, 1), _COMPACT_MIN_EDGES)
+            new_n = pow2_bucket(max(n_alive, 1), _COMPACT_MIN_NODES)
+            if new_m >= len(src) and new_n >= n_cur:
+                # Bucket floor reached: finish on this buffer uncompacted.
+                no_more_compact = True
+                continue
+            relabel = np.cumsum(surv) - 1  # stable: preserves id order
+            keep = np.nonzero(ok_e)[0]
+            new_src = np.zeros(new_m, src.dtype)
+            new_dst = np.zeros(new_m, dst.dtype)
+            new_w = np.zeros(new_m, w.dtype)
+            new_msk = np.zeros(new_m, bool)
+            new_src[: len(keep)] = relabel[src[keep]]
+            new_dst[: len(keep)] = relabel[dst[keep]]
+            new_w[: len(keep)] = w[keep]
+            new_msk[: len(keep)] = True
+            # id_map covers only the real (unpadded) ids; pad nodes are never
+            # alive, so slicing the survivor mask to its length is exact.
+            id_map = id_map[surv[: len(id_map)]]
+            new_s = np.zeros(new_n, bool)
+            new_s[:n_alive] = s_al[surv]
+            s_al = new_s
+            if directed:
+                new_t = np.zeros(new_n, bool)
+                new_t[:n_alive] = t_al[surv]
+                t_al = new_t
+            src, dst, w, msk = new_src, new_dst, new_w, new_msk
+            n_cur = new_n
+            cur_alive_edges = e_alive
+        else:
+            raise RuntimeError(
+                f"compaction ladder exceeded {_COMPACT_MAX_SEGMENTS} segments"
+            )
+
+        # ---- map the final state back to the original id space ----
+        alive_full = np.zeros(n0, bool)
+        alive_full[id_map] = s_al[: len(id_map)]
+        if directed:
+            t_full = np.zeros(n0, bool)
+            t_full[id_map] = t_al[: len(id_map)]
+        empty = jnp.zeros((0,), bool)
+        outcome = PeelOutcome(
+            best_alive=jnp.asarray(best_alive),
+            best_t=jnp.asarray(best_t) if directed else empty,
+            best_density=jnp.asarray(best_rho, jnp.float32),
+            best_size=jnp.asarray(best_size, jnp.int32),
+            passes=jnp.asarray(t_done, jnp.int32),
+            alive=jnp.asarray(alive_full),
+            t_alive=jnp.asarray(t_full) if directed else empty,
+            history_n=jnp.asarray(hist_n),
+            history_m=jnp.asarray(hist_m),
+            history_rho=jnp.asarray(hist_rho),
+        )
+        ladder = {
+            "mode": prob.compaction,
+            "segments": segments,
+            "edge_slots_scanned": int(slots_scanned),
+            "passes": int(t_done),
+        }
+        return outcome, ladder, all_hit
+
+    def _solve_compacted(
+        self, graph: EdgeList, prob: Problem, mesh
+    ) -> DenseSubgraphResult:
+        """solve() tail for ``compaction in ('geometric', 'twophase')`` on
+        the jit/mesh substrates (streaming compacts inside its driver)."""
+        if prob.substrate == "mesh" and mesh is None:
+            raise ValueError("substrate='mesh' needs solve(..., mesh=Mesh)")
+        n = graph.n_nodes
+        mp = prob.resolved_max_passes(n)
+        if prob.objective == "directed" and prob.c is None:
+            # The c-grid loop, per-c through the ladder: the real cache-hit
+            # flag and the winning c's ladder report survive into the result.
+            grid = c_grid(n, prob.c_delta)
+            best = best_c = best_ladder = None
+            rhos, passes = [], []
+            all_hit = True
+            for cv in grid:
+                out, ladder, hit = self._run_compacted(graph, prob, mesh, float(cv))
+                all_hit = all_hit and hit
+                rho = float(out.best_density)
+                rhos.append(rho)
+                passes.append(int(out.passes))
+                if best is None or rho > float(best.best_density):
+                    best, best_c, best_ladder = out, float(cv), ladder
+            extras = {
+                "best_c": best_c,
+                "c_grid": np.asarray(grid),
+                "c_density": np.asarray(rhos),
+                "c_passes": np.asarray(passes),
+                "compaction": best_ladder,
+            }
+            return self._wrap(best, prob, n, mp, all_hit, extras=extras)
+        c = prob.c if prob.objective == "directed" else None
+        out, ladder, hit = self._run_compacted(graph, prob, mesh, c)
+        return self._wrap(out, prob, n, mp, hit, extras={"compaction": ladder})
+
     # -- result wrapping ----------------------------------------------------
     def _wrap(
         self,
@@ -716,6 +1188,7 @@ class Solver:
             max_passes=mp,
             batch=batch,
             cache_hit=cache_hit,
+            compaction=problem.compaction,
         )
         return DenseSubgraphResult.from_outcome(out, provenance=prov, extras=extras)
 
@@ -749,6 +1222,13 @@ class Solver:
                     "degree_fn hooks only apply to the jit substrate"
                 )
             return self._solve_streaming(graph, prob, checkpoint_dir, resume)
+        if prob.compaction in ("geometric", "twophase"):
+            if degree_fn is not None:
+                raise ValueError(
+                    "degree_fn hooks bind one fixed graph; compaction "
+                    "renumbers buffers per segment — use compaction='off'"
+                )
+            return self._solve_compacted(graph, prob, mesh)
         if prob.substrate == "mesh":
             if degree_fn is not None:
                 raise ValueError(
@@ -843,6 +1323,7 @@ class Solver:
             eps=prob.eps,
             checkpoint_dir=checkpoint_dir,
             n_workers=prob.stream_workers,
+            compaction="geometric" if prob.compaction == "geometric" else "off",
         )
         st = drv.run(max_passes=prob.max_passes, resume=resume)
         mp = prob.resolved_max_passes(graph.n_nodes)
@@ -894,9 +1375,25 @@ class Solver:
                 "stacked same-shape graphs (a sequence or a stack_graphs result)"
             )
 
+        def _resolve_batchable(n_nodes: int) -> Problem:
+            # Batched sweeps are ONE vmapped program: lanes shrink at
+            # different rates, so there is no shared buffer to compact.
+            # 'auto' quietly resolves to off; an explicit ladder is an error.
+            p = problem.resolve(n_nodes)
+            if p.compaction != "off":
+                if problem.compaction == "auto":
+                    p = dataclasses.replace(p, compaction="off")
+                else:
+                    raise ValueError(
+                        "solve_batch sweeps share one vmapped program; "
+                        "per-lane compaction is not possible — use "
+                        "compaction='off' (or 'auto')"
+                    )
+            return p
+
         if stacked:
             batched = graph if isinstance(graph, EdgeList) else stack_graphs(list(graph))
-            prob = problem.resolve(batched.n_nodes)
+            prob = _resolve_batchable(batched.n_nodes)
             if prob.substrate != "jit":
                 raise ValueError("solve_batch runs on the jit substrate")
             if prob.backend == "pallas":
@@ -922,7 +1419,7 @@ class Solver:
             raise TypeError(
                 f"solve_batch takes an EdgeList or a sequence, got {type(graph).__name__}"
             )
-        prob = problem.resolve(graph.n_nodes)
+        prob = _resolve_batchable(graph.n_nodes)
         if prob.substrate != "jit":
             raise ValueError("solve_batch runs on the jit substrate")
         n = graph.n_nodes

@@ -38,10 +38,12 @@ def alive_edge_weight(edges: EdgeList, alive: jax.Array) -> jax.Array:
 
 
 def exact_degrees(edges: EdgeList, w_alive: jax.Array) -> jax.Array:
-    """Induced degrees via segment_sum — the reduce-side count of §5.2."""
-    n = edges.n_nodes
-    deg = jax.ops.segment_sum(w_alive, edges.src, num_segments=n)
-    deg = deg + jax.ops.segment_sum(w_alive, edges.dst, num_segments=n)
+    """Induced degrees via segment_sum — delegates to the engine's
+    :func:`~repro.core.engine.segment_degree_count` so the reduce-side
+    count of §5.2 exists exactly once."""
+    from repro.core.engine import segment_degree_count
+
+    deg, _ = segment_degree_count(edges.src, edges.dst, w_alive, edges.n_nodes)
     return deg
 
 

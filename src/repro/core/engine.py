@@ -21,6 +21,22 @@ reuses :func:`undirected_pass_step` so the removal rule still lives here),
 or ``shard_map`` over a device mesh (core/mapreduce.py, which runs
 :func:`run_peel` *inside* the mapped function with a psum'ing backend).
 
+A fourth knob, the **compaction runtime**, is how the loop is *scheduled*
+across shrinking buffers: the paper's Lemma 4 guarantees the node set
+shrinks by a ``(1+eps)`` factor per pass, so scanning all ``m`` padded edge
+slots every pass wastes geometrically-growing fractions of the buffer.
+:func:`run_peel` therefore supports running in SEGMENTS: ``compact_below``
+stops the while-loop as soon as the post-removal alive edge count falls
+under the threshold, and ``init_alive`` / ``init_t_alive`` / ``init_t``
+let the next segment continue the SAME loop (absolute pass counter,
+best-set tracking merged by the caller) on a smaller renumbered buffer.
+The host-side gather/relabel ladder lives in core/api.py
+(``Problem(compaction='geometric'|'twophase')``); compaction is pure
+renumbering, so segmented runs are bit-identical to single-segment runs
+for integer-valued edge weights (and reassociation-level equal otherwise).
+Pass ``k`` then costs ``O(m_k)`` instead of ``O(m)`` — amortized ``O(m)``
+total work across the ladder.
+
 Policy × backend matrix (the paper section each cell realizes)::
 
     policy \\ backend   | exact segsum | count-sketch | pallas tiled | mesh psum
@@ -79,6 +95,19 @@ def removal_threshold(eps: float, rho: jax.Array) -> jax.Array:
     return 2.0 * (1.0 + eps) * rho
 
 
+def segment_degree_count(
+    src: jax.Array, dst: jax.Array, w_alive: jax.Array, n_nodes: int
+) -> Tuple[jax.Array, jax.Array]:
+    """The reduce-side degree count of §5.2: both-endpoint segment_sum plus
+    the total alive edge weight.  The ONLY implementation of the exact
+    undirected count — :class:`ExactBackend`, ``density.exact_degrees`` and
+    the streaming chunk reducer all delegate here (like
+    :func:`removal_threshold`, the expression exists once)."""
+    deg = jax.ops.segment_sum(w_alive, src, num_segments=n_nodes)
+    deg = deg + jax.ops.segment_sum(w_alive, dst, num_segments=n_nodes)
+    return deg, jnp.sum(w_alive)
+
+
 # ---------------------------------------------------------------------------
 # State / outcome — the single pair replacing the old per-loop families
 # ---------------------------------------------------------------------------
@@ -104,6 +133,8 @@ class PeelState(NamedTuple):
     best_rho: jax.Array  # float32[]
     best_size: jax.Array  # int32[] |S| of the best set
     t: jax.Array  # int32[] pass counter
+    alive_edges: jax.Array  # int32[] post-removal alive edge count (0 if untracked)
+    edge_ok: jax.Array  # bool[E] post-removal edge filter | bool[0] if untracked
     history_n: jax.Array  # int32[hist_len]
     history_m: jax.Array  # float32[hist_len]
     history_rho: jax.Array  # float32[hist_len]
@@ -298,10 +329,7 @@ class ExactBackend:
     """segment_sum degrees — the paper's reduce-side count (§5.2, 1 device)."""
 
     def undirected(self, edges, w_alive):
-        n = edges.n_nodes
-        deg = jax.ops.segment_sum(w_alive, edges.src, num_segments=n)
-        deg = deg + jax.ops.segment_sum(w_alive, edges.dst, num_segments=n)
-        return deg, jnp.sum(w_alive)
+        return segment_degree_count(edges.src, edges.dst, w_alive, edges.n_nodes)
 
     def directed(self, edges, w_alive):
         n = edges.n_nodes
@@ -357,10 +385,26 @@ class MeshSegmentSumBackend:
         packed = self._psum(jnp.concatenate([out_deg, in_deg, total[None]]))
         return packed[:n], packed[n : 2 * n], packed[-1]
 
+    def count_edges(self, ok: jax.Array) -> jax.Array:
+        """Global alive-edge count (the compaction trigger): local count of
+        this shard's alive edges, psummed over the edge axes so every device
+        agrees on when a segment ends."""
+        return jax.lax.psum(jnp.sum(ok.astype(jnp.int32)), self.axes)
+
 
 # ---------------------------------------------------------------------------
 # The engine
 # ---------------------------------------------------------------------------
+
+
+def _count_ok(backend, ok: jax.Array) -> jax.Array:
+    """int32[] count of an alive-edge mask.  Backends that reduce across
+    devices (shard_map substrates) expose ``count_edges`` so the segment
+    boundary is a collective decision; everything else counts locally."""
+    counter = getattr(backend, "count_edges", None)
+    if counter is not None:
+        return counter(ok)
+    return jnp.sum(ok.astype(jnp.int32))
 
 
 def run_peel(
@@ -371,14 +415,35 @@ def run_peel(
     *,
     track_history: bool = False,
     init_alive: Optional[jax.Array] = None,
+    init_t_alive: Optional[jax.Array] = None,
     init_best_empty: bool = False,
+    init_t: Optional[jax.Array] = None,
+    compact_below: Optional[int] = None,
+    init_alive_edges: Optional[jax.Array] = None,
+    init_ok_from_mask: bool = False,
 ) -> PeelOutcome:
     """Runs the peel loop to completion.  Pure and traceable: wrappers add
     ``jit``/``vmap``/``shard_map`` around it (substrate axis).
 
-    ``init_alive`` seeds S (default: all nodes) — used by phased/compacted
-    runs; ``init_best_empty`` starts the best set at empty instead of S_0
-    (the recorded best is then only ever a set the loop actually evaluated).
+    Segment controls (the compaction runtime; see the module docstring):
+    ``init_alive`` / ``init_t_alive`` seed S / T (default: all nodes) on a
+    renumbered buffer; ``init_best_empty`` starts the best set at empty
+    instead of S_0 (the recorded best is then only ever a set the loop
+    actually evaluated); ``init_t`` (int32 scalar) continues the ABSOLUTE
+    pass counter so ``t < max_passes`` budgets and ``track_history``
+    indices span segments; ``compact_below`` stops the loop once the
+    post-removal alive edge count drops under it (the caller then gathers
+    survivors into a smaller buffer and re-enters with the carried state).
+    The post-removal edge filter is CARRIED in the loop state and reused
+    as the next pass's filter, so the trigger adds no O(m) scan per pass —
+    each pass computes the mask exactly once, like the classic loop.
+    Callers that already know the entry state can skip the one entry-time
+    filter too: ``init_ok_from_mask`` declares that every masked edge has
+    both endpoints alive initially (true for a freshly compacted buffer,
+    whose gather kept exactly the alive edges), and ``init_alive_edges``
+    supplies its count (the survivor count the compaction just computed).
+    ``compact_below=None`` is the classic single-segment run — the count
+    and the carried mask are never materialized.
     """
     n = edges.n_nodes
     directed = policy.directed
@@ -386,7 +451,12 @@ def run_peel(
     dummy = jnp.zeros((0,), bool)
 
     alive0 = jnp.ones((n,), bool) if init_alive is None else init_alive
+    if directed:
+        ta0 = alive0 if init_t_alive is None else init_t_alive
+    else:
+        ta0 = dummy
     best0 = jnp.zeros_like(alive0) if init_best_empty else alive0
+    t0 = jnp.asarray(0 if init_t is None else init_t, jnp.int32)
 
     def counts(s: PeelState):
         n_s = jnp.sum(s.alive.astype(jnp.int32))
@@ -395,12 +465,20 @@ def run_peel(
 
     def cond(s: PeelState):
         n_s, n_t = counts(s)
-        return policy.keep_going(n_s, n_t) & (s.t < max_passes)
+        going = policy.keep_going(n_s, n_t) & (s.t < max_passes)
+        if compact_below is not None:
+            going = going & (s.alive_edges >= compact_below)
+        return going
 
     def body(s: PeelState) -> PeelState:
         ta = s.t_alive if directed else s.alive
         # (3) of §5.2: the per-pass edge filter against the alive bitmap(s).
-        ok = edges.mask & s.alive[edges.src] & ta[edges.dst]
+        # Compacted segments carry it from the previous pass's removal, so
+        # it is computed exactly once per pass either way.
+        if compact_below is not None:
+            ok = s.edge_ok
+        else:
+            ok = edges.mask & s.alive[edges.src] & ta[edges.dst]
         w_alive = jnp.where(ok, edges.weight, 0.0)
         # (2): the degree count — the only backend-dependent step.
         if directed:
@@ -423,6 +501,14 @@ def run_peel(
         alive = s.alive & ~rm_s
         t_alive = (ta & ~rm_t) if directed else s.t_alive
 
+        if compact_below is not None:
+            ok_next = edges.mask & alive[edges.src] & (
+                t_alive if directed else alive
+            )[edges.dst]
+            ae = _count_ok(backend, ok_next)
+        else:
+            ok_next, ae = s.edge_ok, s.alive_edges
+
         if track_history:
             hn = s.history_n.at[s.t].set(n_s)
             hm = s.history_m.at[s.t].set(total)
@@ -431,17 +517,36 @@ def run_peel(
             hn, hm, hr = s.history_n, s.history_m, s.history_rho
         return PeelState(
             alive, t_alive, best_alive, best_t, best_rho, best_size,
-            s.t + 1, hn, hm, hr,
+            s.t + 1, ae, ok_next, hn, hm, hr,
         )
 
+    if compact_below is not None:
+        if init_ok_from_mask:
+            ok0 = edges.mask
+        else:
+            # One O(m) filter at segment entry; pass 1 reuses it.
+            ok0 = (
+                edges.mask
+                & alive0[edges.src]
+                & (ta0 if directed else alive0)[edges.dst]
+            )
+        if init_alive_edges is not None:
+            ae0 = jnp.asarray(init_alive_edges, jnp.int32)
+        else:
+            ae0 = _count_ok(backend, ok0)
+    else:
+        ok0 = jnp.zeros((0,), bool)
+        ae0 = jnp.asarray(0, jnp.int32)
     init = PeelState(
         alive=alive0,
-        t_alive=alive0 if directed else dummy,
+        t_alive=ta0,
         best_alive=best0,
-        best_t=best0 if directed else dummy,
+        best_t=(jnp.zeros_like(ta0) if init_best_empty else ta0) if directed else dummy,
         best_rho=jnp.asarray(-jnp.inf, jnp.float32),
         best_size=jnp.asarray(0, jnp.int32),
-        t=jnp.asarray(0, jnp.int32),
+        t=t0,
+        alive_edges=ae0,
+        edge_ok=ok0,
         history_n=jnp.full((hist_len,), -1, jnp.int32),
         history_m=jnp.zeros((hist_len,), jnp.float32),
         history_rho=jnp.zeros((hist_len,), jnp.float32),

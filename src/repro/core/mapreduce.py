@@ -117,6 +117,48 @@ def densest_subgraph_distributed(
     return solve(edges, problem, mesh=mesh)
 
 
+def make_distributed_peel_compacted(
+    mesh: Mesh,
+    edge_axes: Tuple[str, ...] = ("data",),
+    eps: float = 0.5,
+    max_passes: Optional[int] = None,
+    n_nodes: Optional[int] = None,
+    wire_dtype: str = "f32",
+    compaction: str = "geometric",
+):
+    """Distributed Algorithm 1 on the GEOMETRIC compaction ladder.
+
+    The multi-level generalization of :func:`make_distributed_peel_twophase`:
+    whenever the (psummed) alive edge count falls below half the current
+    padded buffer, survivors are gathered on the host, renumbered into the
+    next power-of-two bucket, resharded over ``edge_axes``, and the SAME
+    engine loop continues there — every collective (degree psum, density,
+    edge-count trigger) shrinks with the graph, for amortized-O(m) total
+    work.  Returns ``fn(edges: EdgeList) -> DenseSubgraphResult`` (host
+    scheduling makes this an EdgeList-level entry point, unlike the
+    raw-array single-program builders; ``n_nodes``, if given, is validated
+    against each graph for signature parity with the sibling builders).
+    """
+    problem = Problem.undirected(
+        eps=eps,
+        max_passes=max_passes,
+        substrate="mesh",
+        edge_axes=tuple(edge_axes),
+        wire_dtype=wire_dtype,
+        compaction=compaction,
+    )
+
+    def run(edges: EdgeList) -> DenseSubgraphResult:
+        if n_nodes is not None and edges.n_nodes != n_nodes:
+            raise ValueError(
+                f"graph has n_nodes={edges.n_nodes}, builder was sized for "
+                f"{n_nodes}"
+            )
+        return solve(edges, problem, mesh=mesh)
+
+    return run
+
+
 def make_distributed_peel_twophase(
     mesh: Mesh,
     edge_axes: Tuple[str, ...] = ("data",),
@@ -136,6 +178,14 @@ def make_distributed_peel_twophase(
     (1+eps)^K for the remaining O(log n) passes.  Semantics are identical to
     the single-phase peel (compaction is pure renumbering; tested) — both
     phases are the SAME engine loop, just on different id spaces.
+
+    SUPERSEDED as the compaction entry point: this single-XLA-program
+    two-level schedule is now a special case of the engine's compaction
+    runtime — prefer ``Problem(compaction='twophase'|'geometric')`` via the
+    front door (or :func:`make_distributed_peel_compacted`), which
+    generalizes the renumbering into a multi-level ladder shared by all
+    substrates.  Kept for callers that need the whole run as ONE compiled
+    program (no host round-trip between phases).
     """
     axes = tuple(edge_axes)
     assert n_nodes is not None

@@ -41,10 +41,17 @@ def densest_subgraph(
     max_passes: Optional[int] = None,
     degree_fn: Callable[[EdgeList, jax.Array], jax.Array] = _default_degree_fn,
     track_history: bool = True,
+    compaction: str = "off",
 ) -> DenseSubgraphResult:
-    """Runs Algorithm 1 and returns the best intermediate subgraph."""
+    """Runs Algorithm 1 and returns the best intermediate subgraph.
+
+    ``compaction='geometric'`` runs the same loop through the amortized-O(m)
+    compaction ladder (bit-identical results for integer-valued weights; see
+    ``Problem.compaction``).  Incompatible with a custom ``degree_fn``,
+    which binds one fixed graph."""
     problem = Problem.undirected(
-        eps=eps, max_passes=max_passes, track_history=track_history
+        eps=eps, max_passes=max_passes, track_history=track_history,
+        compaction=compaction,
     )
     hook = None if degree_fn is _default_degree_fn else degree_fn
     return solve(edges, problem, degree_fn=hook)

@@ -65,15 +65,21 @@ def densest_directed_search(
     eps: float = 0.5,
     delta: float = 2.0,
     max_passes: Optional[int] = None,
+    compaction: str = "off",
 ):
     """Grid search over c (the paper's practical recipe).
 
     Returns (result, best_c, per_c_densities, per_c_passes).  One compilation
     is reused across all c values because c enters as a runtime scalar.
+    ``compaction='geometric'`` runs every c's peel through the amortized-O(m)
+    ladder (the dual S/T bitmaps are renumbered together).
     """
     res = solve(
         edges,
-        Problem.directed(c=None, eps=eps, c_delta=delta, max_passes=max_passes),
+        Problem.directed(
+            c=None, eps=eps, c_delta=delta, max_passes=max_passes,
+            compaction=compaction,
+        ),
     )
     ex = res.extras
     return res, ex["best_c"], np.asarray(ex["c_density"]), np.asarray(ex["c_passes"])

@@ -27,8 +27,18 @@ def densest_subgraph_at_least_k(
     k: int,
     eps: float = 0.5,
     max_passes: Optional[int] = None,
+    compaction: str = "off",
 ) -> DenseSubgraphResult:
-    return solve(edges, Problem.at_least_k(k=k, eps=eps, max_passes=max_passes))
+    """``compaction='geometric'`` rides the amortized-O(m) ladder — the
+    rank-selection removal is renumbering-invariant (stable relabeling
+    preserves the (degree, id) tie-break order), so results stay
+    bit-identical for integer-valued weights."""
+    return solve(
+        edges,
+        Problem.at_least_k(
+            k=k, eps=eps, max_passes=max_passes, compaction=compaction
+        ),
+    )
 
 
 __getattr__ = deprecated_alias_getattr(

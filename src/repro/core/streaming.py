@@ -36,17 +36,21 @@ Chunk = Tuple[np.ndarray, np.ndarray, np.ndarray]  # (src, dst, weight)
 
 @jax.jit
 def _chunk_stats(src, dst, w, alive):
-    """Partial (degree vector, total weight) for one edge chunk.
+    """Partial (degree vector, total weight, alive edge count) for one edge
+    chunk.
 
     Accumulates in float32 regardless of the incoming weight dtype so the
     chunk reduction is stable for low-precision edge streams (bf16/f16
-    weights) and identical across chunkings."""
-    n = alive.shape[0]
+    weights) and identical across chunkings.  The degree count itself is
+    the engine's :func:`~repro.core.engine.segment_degree_count` (§5.2's
+    reduce-side count exists once); the alive edge count feeds the
+    geometric compaction trigger."""
+    from repro.core.engine import segment_degree_count
+
     ok = alive[src] & alive[dst]
     w_alive = jnp.where(ok, w.astype(jnp.float32), jnp.float32(0.0))
-    deg = jax.ops.segment_sum(w_alive, src, num_segments=n)
-    deg = deg + jax.ops.segment_sum(w_alive, dst, num_segments=n)
-    return deg, jnp.sum(w_alive)
+    deg, total = segment_degree_count(src, dst, w_alive, alive.shape[0])
+    return deg, total, jnp.sum(ok.astype(jnp.int32))
 
 
 @dataclass
@@ -70,7 +74,12 @@ class StreamingDensest:
         n_workers: int = 4,
         speculative: bool = True,
         speculate_tail_frac: float = 0.2,
+        compaction: str = "off",
     ):
+        if compaction not in ("off", "geometric"):
+            raise ValueError(
+                f"compaction={compaction!r} not in ('off', 'geometric')"
+            )
         self.chunk_stream = chunk_stream
         self.n_nodes = n_nodes
         self.eps = eps
@@ -78,8 +87,10 @@ class StreamingDensest:
         self.n_workers = n_workers
         self.speculative = speculative
         self.speculate_tail_frac = speculate_tail_frac
+        self.compaction = compaction
         self.chunk_timings: list[float] = []
         self.speculative_reissues = 0
+        self.compactions = 0  # geometric: stream rebuilds performed
 
     # ----- checkpointing -------------------------------------------------
     def _ckpt_path(self) -> Optional[str]:
@@ -131,24 +142,35 @@ class StreamingDensest:
         )
 
     # ----- one streaming pass --------------------------------------------
-    def _pass_stats(self, alive_np: np.ndarray) -> Tuple[np.ndarray, float]:
-        """Streams all chunks once; returns (degree vector, total weight).
+    def _pass_stats(
+        self,
+        alive_np: np.ndarray,
+        stream: Optional[Callable[[], Iterator[Chunk]]] = None,
+    ) -> Tuple[np.ndarray, float, int, int]:
+        """Streams all chunks once; returns (degree vector, total weight,
+        alive edge count, edge slots streamed).
 
         Chunks are processed by a worker pool; the slowest tail is
         speculatively re-issued.  Reductions are order-independent.
+        ``stream`` defaults to the constructor's chunk stream (the
+        compaction ladder substitutes its rebuilt, smaller stream).
         """
         alive = jnp.asarray(alive_np)
-        chunks = list(self.chunk_stream())
-        deg = np.zeros(self.n_nodes, np.float32)
+        chunks = list((stream or self.chunk_stream)())
+        deg = np.zeros(alive_np.shape[0], np.float32)
         total = 0.0
-        done: dict[int, Tuple[np.ndarray, float]] = {}
+        n_ok = 0
+        n_slots = sum(len(c[0]) for c in chunks)
+        done: dict[int, Tuple[np.ndarray, float, int]] = {}
         lock = threading.Lock()
 
         def work(idx: int) -> int:
             t0 = time.perf_counter()
             s, d, w = chunks[idx]
-            dd, tt = _chunk_stats(jnp.asarray(s), jnp.asarray(d), jnp.asarray(w), alive)
-            out = (np.asarray(dd), float(tt))
+            dd, tt, cc = _chunk_stats(
+                jnp.asarray(s), jnp.asarray(d), jnp.asarray(w), alive
+            )
+            out = (np.asarray(dd), float(tt), int(cc))
             with lock:
                 if idx not in done:  # first completion wins (idempotent)
                     done[idx] = out
@@ -176,10 +198,66 @@ class StreamingDensest:
                     speculated = True
 
         for idx in range(len(chunks)):
-            dd, tt = done[idx]
+            dd, tt, cc = done[idx]
             deg += dd
             total += tt
-        return deg, total
+            n_ok += cc
+        return deg, total, n_ok, n_slots
+
+    # ----- geometric compaction (amortized-O(m) streaming) ----------------
+    def _compact_stream(
+        self,
+        stream: Callable[[], Iterator[Chunk]],
+        alive_c: np.ndarray,
+        id_map: np.ndarray,
+    ):
+        """Rebuilds the chunk stream over surviving edges with survivors
+        renumbered into a dense (power-of-two padded) node range — one extra
+        streaming pass, amortized away by the halved stream it produces.
+        Returns (stream, alive_c, id_map, n_slots).
+
+        Memory note: the rebuilt stream keeps the surviving chunks resident
+        in host RAM (never concatenated — per-chunk arrays only, so there is
+        no 2x materialization spike).  The first trigger fires at under half
+        the stream, so residency is < m/2 edges and halves per rung; for
+        streams whose SURVIVORS cannot fit in memory, keep
+        ``compaction='off'`` (a disk-spill rebuild is a ROADMAP item)."""
+        from repro.graph.partition import pow2_bucket
+
+        surv = alive_c[: len(id_map)]
+        n_alive = int(surv.sum())
+        relabel = (np.cumsum(alive_c) - 1).astype(np.int64)
+        # Pow2-padded node space (with >= 1 permanently-dead pad node for
+        # edge padding below): the jitted chunk kernel sees O(log n)
+        # distinct degree-vector shapes across the whole ladder.
+        n_pad = pow2_bucket(n_alive + 1, floor=64)
+        pad_id = np.int32(n_pad - 1)  # never alive -> pad edges never count
+        chunks = []
+        n_edges = 0
+        for s, d, w in stream():
+            ok = alive_c[s] & alive_c[d]
+            kept = int(ok.sum())
+            if kept == 0:
+                continue
+            # Per-chunk pow2 length so surviving (ragged) chunks land on a
+            # bounded set of shapes instead of one compile per chunk.
+            cap = pow2_bucket(kept, floor=256)
+            cs = np.full(cap, pad_id, np.int32)
+            cd = np.full(cap, pad_id, np.int32)
+            cw = np.zeros(cap, w.dtype)
+            cs[:kept] = relabel[s[ok]]
+            cd[:kept] = relabel[d[ok]]
+            cw[:kept] = w[ok]
+            chunks.append((cs, cd, cw))
+            n_edges += kept
+        new_alive = np.arange(n_pad) < n_alive
+        new_id_map = id_map[surv]
+        self.compactions += 1
+
+        def gen() -> Iterator[Chunk]:
+            yield from chunks
+
+        return gen, new_alive, new_id_map, n_edges
 
     # ----- the algorithm ---------------------------------------------------
     def run(self, max_passes: Optional[int] = None, resume: bool = True) -> StreamState:
@@ -198,23 +276,45 @@ class StreamingDensest:
 
         from repro.core.engine import undirected_pass_step
 
+        # Compact view of the live subproblem: ``id_map`` maps compact node
+        # ids back to original ids (identity until the first compaction);
+        # the FULL-space StreamState is maintained throughout, so the
+        # checkpoint format and all outputs are unchanged.
+        stream = self.chunk_stream
+        id_map = np.arange(self.n_nodes, dtype=np.int64)
+        alive_c = st.alive.copy()
+        n_slots: Optional[int] = None
+
         while st.alive.any() and st.pass_idx < max_passes:
-            deg, total = self._pass_stats(st.alive)
+            deg, total, e_alive, n_slots = self._pass_stats(alive_c, stream)
             n_alive = int(st.alive.sum())
             # The threshold/removal rule is the engine's UndirectedThreshold
             # policy step — the streaming driver only supplies the chunked
             # degree accumulation around it.
-            new_alive, rho_arr = undirected_pass_step(
-                jnp.asarray(st.alive), jnp.asarray(deg), float(total), self.eps
+            new_alive_c, rho_arr = undirected_pass_step(
+                jnp.asarray(alive_c), jnp.asarray(deg), float(total), self.eps
             )
+            new_alive_c = np.asarray(new_alive_c)
             rho = float(rho_arr)
             st.history.append((n_alive, total, rho))
             if rho > st.best_rho:
                 st.best_rho = rho
                 st.best_alive = st.alive.copy()
-            st.alive = np.asarray(new_alive)
+            full = np.zeros(self.n_nodes, bool)
+            full[id_map] = new_alive_c[: len(id_map)]
+            st.alive = full
             st.pass_idx += 1
             self._save(st)
+            alive_c = new_alive_c
+            if (
+                self.compaction == "geometric"
+                and st.alive.any()
+                and st.pass_idx < max_passes  # a rebuild must have a consumer
+                and 2 * e_alive < n_slots
+            ):
+                stream, alive_c, id_map, n_slots = self._compact_stream(
+                    stream, alive_c, id_map
+                )
         return st
 
 

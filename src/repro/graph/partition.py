@@ -16,6 +16,13 @@ from typing import Tuple
 import numpy as np
 
 
+def pow2_bucket(x: int, floor: int = 1) -> int:
+    """Smallest power of two >= x, floored — THE bucket-size rule of the
+    compaction ladder (edge/node buffers, streaming degree vectors, tile
+    capacities), shared so every consumer lands on the same shape set."""
+    return max(floor, 1 << max(int(x) - 1, 0).bit_length())
+
+
 @dataclasses.dataclass(frozen=True)
 class TiledEdges:
     """Static tiling of (duplicated) edge endpoints.
@@ -55,11 +62,19 @@ def bucket_edges_by_tile(
     tile_size: int = 1024,
     block: int = 256,
     directed: bool = False,
+    pow2_pad: bool = False,
 ) -> TiledEdges:
     """One-time 'shuffle': group endpoint updates by node tile.
 
     For directed graphs, only dst-targeted updates are produced (out-degree
     is bucketed separately by swapping arguments).
+
+    ``pow2_pad`` rounds the per-tile capacity (``max_epT``) up to the next
+    power of two after the block rounding.  The capacity is content-dependent
+    (the max in-tile degree), so without it every compaction rung would mint
+    a fresh kernel shape; with it the ladder's tilings land on O(log E)
+    bucketed shapes that the Solver's program cache reuses across segments
+    and graphs.
     """
     src = np.asarray(src, np.int64)
     dst = np.asarray(dst, np.int64)
@@ -83,6 +98,8 @@ def bucket_edges_by_tile(
     max_epT = int(counts.max(initial=0))
     max_epT = ((max_epT + block - 1) // block) * block
     max_epT = max(max_epT, block)
+    if pow2_pad:
+        max_epT = pow2_bucket(max_epT)
 
     tl = np.zeros((n_tiles, max_epT), np.int32)
     sg = np.zeros((n_tiles, max_epT), np.int32)

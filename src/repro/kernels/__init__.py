@@ -1,3 +1,19 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """THE pallas dispatch rule, shared by every kernel wrapper: ``None``
+    means "compiled on TPU, interpreter elsewhere".  A hard ``interpret=True``
+    default used to run kernels through the (orders of magnitude slower)
+    interpreter even on TPU because no public wrapper ever flipped it."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -78,9 +78,12 @@ def count_sketch_update_pallas(
     n_buckets: int,
     block_e: int = 512,
     col_chunk: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,  # None: compiled on TPU, interpreter elsewhere
 ) -> jax.Array:
     """Returns float32[t, n_buckets] counter tables."""
+    from repro.kernels import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     e = endpoints.shape[0]
     t = a_h.shape[0]
     assert e % block_e == 0, (e, block_e)

@@ -4,6 +4,7 @@ with core/countsketch.py's SketchParams."""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +21,7 @@ def count_sketch_update(
     *,
     use_pallas: bool = True,
     block_e: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,  # None: compiled on TPU, interpreter elsewhere
 ) -> jax.Array:
     """float32[t, b] counter tables from an endpoint stream."""
     if not use_pallas:

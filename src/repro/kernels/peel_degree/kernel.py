@@ -62,9 +62,12 @@ def tiled_degrees_pallas(
     *,
     tile_size: int,
     block_e: int = 512,
-    interpret: bool = True,  # CPU container: interpret mode; False on TPU
+    interpret: bool | None = None,  # None: compiled on TPU, interpreter elsewhere
 ) -> jax.Array:
     """Returns float32[n_tiles, tile_size] degree histogram."""
+    from repro.kernels import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     n_tiles, max_epT = target_local.shape
     assert max_epT % block_e == 0, (max_epT, block_e)
     n_eb = max_epT // block_e

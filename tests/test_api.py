@@ -15,6 +15,7 @@ float scalar folding of the unbatched path and the traced-f32 arithmetic of
 the vmapped path agree to the bit.
 """
 
+import dataclasses
 import warnings
 
 import numpy as np
@@ -403,6 +404,201 @@ def test_solver_cache_directed_shares_program_across_c():
 
 
 # ---------------------------------------------------------------------------
+# Compaction runtime: bit-identity matrix vs compaction='off'
+# ---------------------------------------------------------------------------
+
+
+def _same_full(a, b):
+    """Every outcome array bit-identical (best/final sets, scalars, history)."""
+    _same_result(a, b)
+    _same(a.alive, b.alive)
+    if np.asarray(a.t_alive).size:
+        _same(a.t_alive, b.t_alive)
+
+
+@pytest.mark.parametrize("mode", ["geometric", "twophase"])
+@pytest.mark.parametrize("eps", [0.1, 0.5])
+def test_compaction_undirected_jit_bit_identical(mode, eps):
+    edges = _und()
+    s = Solver()
+    off = s.solve(edges, Problem.undirected(eps=eps, track_history=True))
+    on = s.solve(
+        edges, Problem.undirected(eps=eps, track_history=True, compaction=mode)
+    )
+    _same_full(off, on)
+    _same(off.history_n, on.history_n)
+    _same(off.history_rho, on.history_rho)
+    assert on.provenance.compaction == mode
+    lad = on.extras["compaction"]
+    assert lad["passes"] == int(off.passes)
+    assert sum(seg["passes"] for seg in lad["segments"]) == int(off.passes)
+
+
+@pytest.mark.parametrize("mode", ["geometric", "twophase"])
+def test_compaction_at_least_k_jit_bit_identical(mode):
+    edges = _und()
+    s = Solver()
+    off = s.solve(edges, Problem.at_least_k(k=30, eps=0.5))
+    on = s.solve(edges, Problem.at_least_k(k=30, eps=0.5, compaction=mode))
+    _same_full(off, on)
+
+
+@pytest.mark.parametrize("mode", ["geometric", "twophase"])
+@pytest.mark.parametrize("c", [0.5, 1.0, 2.0])
+def test_compaction_directed_jit_bit_identical(mode, c):
+    edges = _dir()
+    s = Solver()
+    off = s.solve(edges, Problem.directed(c=c, eps=0.5))
+    on = s.solve(edges, Problem.directed(c=c, eps=0.5, compaction=mode))
+    _same_full(off, on)
+
+
+def test_compaction_directed_grid_matches_off():
+    edges = _dir()
+    s = Solver()
+    off = s.solve(edges, Problem.directed(c=None, eps=0.5))
+    on = s.solve(edges, Problem.directed(c=None, eps=0.5, compaction="geometric"))
+    assert on.extras["best_c"] == off.extras["best_c"]
+    np.testing.assert_array_equal(on.extras["c_density"], off.extras["c_density"])
+    np.testing.assert_array_equal(on.extras["c_passes"], off.extras["c_passes"])
+    _same_result(on, off)
+
+
+def test_compaction_pallas_backend_rides_the_ladder():
+    edges = erdos_renyi(300, avg_deg=6, seed=4)
+    s = Solver()
+    prob = Problem.undirected(eps=0.5, backend="pallas", tile_size=128, tile_block=128)
+    off = s.solve(edges, prob)
+    on = s.solve(edges, dataclasses.replace(prob, compaction="geometric"))
+    _same_full(off, on)
+
+
+def test_compaction_mesh_substrate_bit_identical():
+    edges = _und()
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    s = Solver()
+    off = s.solve(edges, Problem.undirected(eps=0.2, substrate="mesh"), mesh=mesh)
+    on = s.solve(
+        edges,
+        Problem.undirected(eps=0.2, substrate="mesh", compaction="geometric"),
+        mesh=mesh,
+    )
+    _same_full(off, on)
+
+
+def test_compaction_streaming_substrate_bit_identical():
+    edges = _und()
+    s = Solver()
+    off = s.solve(
+        edges,
+        Problem.undirected(eps=0.5, substrate="streaming", stream_chunk=257,
+                           stream_workers=2),
+    )
+    on = s.solve(
+        edges,
+        Problem.undirected(eps=0.5, substrate="streaming", stream_chunk=257,
+                           stream_workers=2, compaction="geometric"),
+    )
+    _same(off.best_alive, on.best_alive)
+    _same(off.alive, on.alive)
+    assert float(off.best_density) == float(on.best_density)
+    assert int(off.passes) == int(on.passes)
+
+
+def test_compaction_scans_fewer_edge_slots():
+    """The acceptance metric in miniature: the geometric ladder scans
+    strictly fewer edge slots than passes x padded-m."""
+    edges = _und()
+    s = Solver()
+    on = s.solve(edges, Problem.undirected(eps=0.1, compaction="geometric"))
+    lad = on.extras["compaction"]
+    off_slots = int(on.passes) * edges.n_edges_padded
+    assert lad["edge_slots_scanned"] < off_slots
+
+
+def test_compaction_ladder_shares_programs_across_c():
+    """c is a runtime argument of segment programs too: rung cache keys for
+    two fixed c values must be IDENTICAL (regression: c keyed the rungs and
+    every fixed c recompiled the whole ladder)."""
+    s = Solver()
+    edges = _dir()
+    p1 = Problem.directed(c=0.5, eps=0.5, compaction="geometric").resolve(edges.n_nodes)
+    p2 = Problem.directed(c=1.0, eps=0.5, compaction="geometric").resolve(edges.n_nodes)
+    for kind in ("cseg", "cseg_mesh"):
+        k1 = s._key(kind, p1, 32, 128, 1024, "float32", None, (64,))
+        k2 = s._key(kind, p2, 32, 128, 1024, "float32", None, (64,))
+        assert k1 == k2
+    a = s.solve(edges, Problem.directed(c=0.5, eps=0.5, compaction="geometric"))
+    b = s.solve(edges, Problem.directed(c=1.0, eps=0.5, compaction="geometric"))
+    _same_full(s.solve(edges, Problem.directed(c=0.5, eps=0.5)), a)
+    _same_full(s.solve(edges, Problem.directed(c=1.0, eps=0.5)), b)
+
+
+def test_compaction_ladder_programs_are_cached():
+    """Same graph re-solved: every ladder rung must be a program-cache hit
+    (the Solver keys rungs on bucket shape, not graph content)."""
+    edges = _und()
+    s = Solver()
+    s.solve(edges, Problem.undirected(eps=0.25, compaction="geometric"))
+    traces = s.trace_count
+    r2 = s.solve(edges, Problem.undirected(eps=0.25, compaction="geometric"))
+    assert s.trace_count == traces  # no retrace anywhere in the ladder
+    assert r2.provenance.cache_hit
+
+
+@pytest.mark.parametrize("mode", ["geometric", "twophase"])
+def test_compaction_zero_pass_runs_match_off(mode):
+    """Degenerate runs where the loop never executes a pass (k > n, or
+    max_passes=0) must still match 'off', which returns the full initial
+    set (regression: the ladder used to return an all-empty best set)."""
+    edges = erdos_renyi(50, avg_deg=4, seed=0)
+    s = Solver()
+    for prob in (
+        Problem.at_least_k(k=60, eps=0.5),
+        Problem.undirected(eps=0.5, max_passes=0),
+    ):
+        off = s.solve(edges, prob)
+        on = s.solve(edges, dataclasses.replace(prob, compaction=mode))
+        _same_full(off, on)
+
+
+def test_compaction_auto_resolution_and_validation():
+    # auto -> geometric for exact, off for sketch.
+    assert Problem.undirected(compaction="auto").resolve(100).compaction == "geometric"
+    # An explicit ladder steers backend='auto' to exact even above the
+    # sketch threshold (sketch can't ride the ladder).
+    big = Problem.undirected(backend="auto", compaction="geometric").resolve(2_000_000)
+    assert big.backend == "exact" and big.compaction == "geometric"
+    assert (
+        Problem.undirected(backend="sketch", compaction="auto").resolve(100).compaction
+        == "off"
+    )
+    with pytest.raises(ValueError):
+        Problem.undirected(backend="sketch", compaction="geometric").resolve(100)
+    with pytest.raises(ValueError):
+        Problem.undirected(substrate="streaming", compaction="twophase").resolve(100)
+    with pytest.raises(ValueError):
+        Problem(compaction="nope")
+    # Explicit ladder modes are rejected by the batched driver; auto is not.
+    edges = _und()
+    with pytest.raises(ValueError):
+        solve_batch(
+            edges, Problem.undirected(max_passes=16, compaction="geometric"),
+            eps=[0.5],
+        )
+    rb = solve_batch(
+        edges, Problem.undirected(max_passes=16, compaction="auto"), eps=[0.5]
+    )
+    assert rb.provenance.compaction == "off"
+    # degree_fn hooks bind one buffer; compaction renumbers them.
+    with pytest.raises(ValueError):
+        solve(
+            edges, Problem.undirected(compaction="geometric"),
+            degree_fn=lambda e, w: w,
+        )
+
+
+# ---------------------------------------------------------------------------
 # Result type and deprecation aliases
 # ---------------------------------------------------------------------------
 
@@ -467,8 +663,14 @@ def test_chunk_stats_accumulates_float32():
     dst = jnp.asarray([1, 2, 3, 2], jnp.int32)
     alive = jnp.ones((4,), bool)
     for dtype in (jnp.bfloat16, jnp.float16, jnp.float32):
-        deg, total = _chunk_stats(src, dst, jnp.ones((4,), dtype), alive)
+        deg, total, n_ok = _chunk_stats(src, dst, jnp.ones((4,), dtype), alive)
         assert deg.dtype == jnp.float32
         assert total.dtype == jnp.float32
         assert float(total) == 4.0
+        assert int(n_ok) == 4  # the geometric-compaction trigger count
         np.testing.assert_array_equal(np.asarray(deg), [2.0, 2.0, 3.0, 1.0])
+    # Dead-endpoint edges drop out of the alive count.
+    deg, total, n_ok = _chunk_stats(
+        src, dst, jnp.ones((4,), jnp.float32), alive.at[3].set(False)
+    )
+    assert int(n_ok) == 3 and float(total) == 3.0

@@ -326,6 +326,137 @@ def test_undirected_pass_step_equals_engine_pass():
 
 
 # ---------------------------------------------------------------------------
+# Segmented runs (the compaction runtime's engine contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("eps", [0.1, 0.5])
+def test_segmented_run_equals_single_run(eps):
+    """compact_below + init_alive/init_t re-entry == one uncompacted run:
+    same best set (earliest-wins tie merge), density, pass count, history."""
+    edges = erdos_renyi(220, avg_deg=8, seed=2)
+    mp = 64
+    policy = UndirectedThreshold(eps)
+    full = jax.jit(
+        lambda e: run_peel(e, policy, ExactBackend(), mp, track_history=True)
+    )(edges)
+    m = int(edges.num_real_edges())
+    seg1 = jax.jit(
+        lambda e: run_peel(
+            e, policy, ExactBackend(), mp, track_history=True,
+            compact_below=m // 2, init_best_empty=True,
+        )
+    )(edges)
+    assert int(seg1.passes) < int(full.passes)  # the trigger actually fired
+    seg2 = jax.jit(
+        lambda e, a, t: run_peel(
+            e, policy, ExactBackend(), mp, track_history=True,
+            init_alive=a, init_t=t, init_best_empty=True,
+        )
+    )(edges, seg1.alive, seg1.passes)
+    use2 = float(seg2.best_density) > float(seg1.best_density)
+    best = seg2.best_alive if use2 else seg1.best_alive
+    np.testing.assert_array_equal(np.asarray(best), np.asarray(full.best_alive))
+    assert max(float(seg1.best_density), float(seg2.best_density)) == float(
+        full.best_density
+    )
+    assert int(seg2.passes) == int(full.passes)
+    np.testing.assert_array_equal(np.asarray(seg2.alive), np.asarray(full.alive))
+    hn1 = np.asarray(seg1.history_n)
+    merged = np.where(hn1 >= 0, hn1, np.asarray(seg2.history_n))
+    np.testing.assert_array_equal(merged, np.asarray(full.history_n))
+
+
+def test_compact_below_none_is_classic_loop():
+    """compact_below=None must not change anything (the off path)."""
+    edges = erdos_renyi(150, avg_deg=6, seed=9)
+    a = jax.jit(
+        lambda e: run_peel(e, UndirectedThreshold(0.5), ExactBackend(), 64)
+    )(edges)
+    b = jax.jit(
+        lambda e: run_peel(
+            e, UndirectedThreshold(0.5), ExactBackend(), 64, compact_below=None
+        )
+    )(edges)
+    np.testing.assert_array_equal(np.asarray(a.best_alive), np.asarray(b.best_alive))
+    assert int(a.passes) == int(b.passes)
+
+
+def _relabel_graph(edges, perm):
+    """Applies a node permutation and keeps edge order (a stable relabel)."""
+    p = jnp.asarray(perm, jnp.int32)
+    from repro.graph.edgelist import EdgeList
+
+    return EdgeList(
+        src=p[edges.src], dst=p[edges.dst], weight=edges.weight,
+        mask=edges.mask, n_nodes=edges.n_nodes,
+    )
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_relabel_peel_unrelabel_roundtrip_seeded(seed):
+    """Seeded variant of the relabel round-trip (runs without hypothesis)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 40))
+    src = rng.integers(0, n, 3 * n)
+    dst = rng.integers(0, n, 3 * n)
+    keep = src != dst
+    edges = from_numpy(src[keep], dst[keep], n)
+    perm = rng.permutation(n)
+    base = jax.jit(
+        lambda e: run_peel(e, UndirectedThreshold(0.5), ExactBackend(), 64)
+    )(edges)
+    rel = jax.jit(
+        lambda e: run_peel(e, UndirectedThreshold(0.5), ExactBackend(), 64)
+    )(_relabel_graph(edges, perm))
+    np.testing.assert_array_equal(
+        np.asarray(rel.best_alive)[perm], np.asarray(base.best_alive)
+    )
+    assert float(rel.best_density) == float(base.best_density)
+    assert int(rel.passes) == int(base.passes)
+
+
+def test_relabel_peel_unrelabel_roundtrip_hypothesis():
+    """The compaction ladder's core assumption, as a property: relabeling
+    nodes, peeling, and mapping the best-set bitmap back is EXACTLY the
+    peel of the original graph (Algorithm 1's removal rule is id-free)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    mp = 64
+
+    @st.composite
+    def cases(draw):
+        n = draw(st.integers(5, 24))
+        m = draw(st.integers(4, 60))
+        rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+        src = rng.integers(0, n, m)
+        dst = rng.integers(0, n, m)
+        keep = src != dst
+        if keep.sum() == 0:
+            src, dst, keep = np.asarray([0]), np.asarray([1]), np.asarray([True])
+        perm = rng.permutation(n)
+        return from_numpy(src[keep], dst[keep], n), perm
+
+    @given(cases(), st.sampled_from([0.1, 0.5]))
+    @settings(max_examples=25, deadline=None)
+    def check(case, eps):
+        edges, perm = case
+        base = jax.jit(
+            lambda e: run_peel(e, UndirectedThreshold(eps), ExactBackend(), mp)
+        )(edges)
+        rel = jax.jit(
+            lambda e: run_peel(e, UndirectedThreshold(eps), ExactBackend(), mp)
+        )(_relabel_graph(edges, perm))
+        back = np.asarray(rel.best_alive)[perm]  # unrelabel the bitmap
+        np.testing.assert_array_equal(back, np.asarray(base.best_alive))
+        assert float(rel.best_density) == float(base.best_density)
+        assert int(rel.passes) == int(base.passes)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
 # Approximation property: engine density >= rho* / (2(1+eps))
 # ---------------------------------------------------------------------------
 
