@@ -1,22 +1,28 @@
 """END-TO-END driver — the paper's kind of workload at example scale.
 
-    PYTHONPATH=src python examples/mapreduce_stream.py
+    PYTHONPATH=src python examples/mapreduce_stream.py [--n 2000000]
 
-A 2M-node / ~8M-edge power-law graph is processed three ways:
+A power-law graph (2M nodes / ~8M edges by default) is processed four ways:
 
   1. SEMI-STREAMING (paper §4.1): multi-pass chunked edge stream with O(n)
      state, per-pass atomic checkpoints, straggler-aware speculative chunk
      re-issue — then KILLED mid-run and RESUMED from the checkpoint.
-  2. MAPREDUCE-ANALOGUE (paper §5.2): the whole O(log n)-pass algorithm as
+  2. OUT-OF-CORE SPILL LADDER: the same stream written once to an on-disk
+     memmap edge store and run through the geometric compaction ladder with
+     a residency cap SMALLER than the ladder's survivors — the rebuilt
+     survivor streams spill to disk, so host RAM holds only the async
+     pipeline's prefetch window.
+  3. MAPREDUCE-ANALOGUE (paper §5.2): the whole O(log n)-pass algorithm as
      ONE compiled XLA program over an edge-sharded device mesh (this process
      forces 8 host devices to make the collectives real).
-  3. TWO-PHASE COMPACTED peel (beyond-paper, EXPERIMENTS.md §Perf): same
-     answer, provably smaller phase-2 psums via Lemma 4.
+  4. TWO-PHASE COMPACTED peel (beyond-paper): same answer, provably smaller
+     phase-2 psums via Lemma 4; plus the Count-Sketch memory mode (§5.1).
 
-All three must agree with each other (and with the Count-Sketch variant
-within its approximation).
+All exact modes must agree (and the Count-Sketch variant within its
+approximation).
 """
 
+import argparse
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -31,24 +37,38 @@ from repro.core import (
     Problem,
     StreamingDensest,
     chunked_from_arrays,
+    chunked_from_memmap,
     solve,
 )
 from repro.core.mapreduce import make_distributed_peel_twophase, shard_edges
+from repro.graph.edgelist import save_edges_memmap
 from repro.graph.generators import chung_lu_power_law
 
 
-def main():
-    edges = chung_lu_power_law(n=2_000_000, exponent=2.0, avg_deg=8.0, seed=42)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2_000_000)
+    ap.add_argument("--avg-deg", type=float, default=8.0)
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="stream chunk size (default: ~m/8)")
+    ap.add_argument("--scratch", default="experiments/stream_ckpt",
+                    help="checkpoint / edge-store / spill scratch dir")
+    args = ap.parse_args(argv)
+
+    edges = chung_lu_power_law(
+        n=args.n, exponent=2.0, avg_deg=args.avg_deg, seed=42
+    )
     n, m = edges.n_nodes, int(edges.num_real_edges())
-    print(f"graph: n={n:,} m={m:,}")
+    chunk = args.chunk or max(m // 8, 1024)
+    print(f"graph: n={n:,} m={m:,} chunk={chunk:,}")
     src = np.asarray(edges.src)
     dst = np.asarray(edges.dst)
 
     # ---- 1. semi-streaming with checkpoint/restart + stragglers ----------
-    ckpt_dir = "experiments/stream_ckpt"
+    ckpt_dir = args.scratch
     if os.path.exists(os.path.join(ckpt_dir, "stream_state.npz")):
         os.unlink(os.path.join(ckpt_dir, "stream_state.npz"))
-    stream = chunked_from_arrays(src, dst, None, chunk=1_000_000)
+    stream = chunked_from_arrays(src, dst, None, chunk=chunk)
 
     t0 = time.time()
     sd = StreamingDensest(stream, n, eps=0.5, checkpoint_dir=ckpt_dir)
@@ -65,6 +85,36 @@ def main():
         f"passes={st.pass_idx} wall={time.time() - t0:.1f}s "
         f"speculative_reissues={sd2.speculative_reissues}"
     )
+
+    # ---- 1b. out-of-core: memmap store + spilled compaction ladder -------
+    # The edge store lives on disk; the residency cap is far below the
+    # ladder's survivor count, so every rebuilt survivor stream spills to
+    # memmaps under spill_dir and host RAM holds only the prefetch window.
+    store = save_edges_memmap(
+        os.path.join(args.scratch, "edge_store"), src, dst
+    )
+    chunk_ooc = max(m // 64, 256)
+    # Rebuilt spill chunks are pow2-padded (<= 2x the input chunk), so the
+    # pipeline's 4-chunk window is bounded by 8 x chunk_ooc ~ m/8 — far
+    # below the ladder's survivor count (just under m/2 at first trigger).
+    cap = 8 * chunk_ooc
+    t0 = time.time()
+    ooc = StreamingDensest(
+        chunked_from_memmap(store, chunk=chunk_ooc), n, eps=0.5,
+        compaction="geometric", prefetch=4,
+        spill_dir=os.path.join(args.scratch, "spill"),
+        residency_cap_edges=cap,
+    )
+    st_ooc = ooc.run(resume=False)
+    print(
+        f"[out-of-core] rho={st_ooc.best_rho:.4f} passes={st_ooc.pass_idx} "
+        f"wall={time.time() - t0:.1f}s spill_rungs={ooc.spill_rungs} "
+        f"peak_resident={ooc.peak_resident_edges:,}/{m:,} edges "
+        f"(cap {cap:,})"
+    )
+    assert ooc.peak_resident_edges <= cap
+    assert st_ooc.best_rho == rho_stream
+    assert (st_ooc.best_alive == st.best_alive).all()
 
     # ---- 2. one-XLA-program MapReduce analogue on the device mesh --------
     n_dev = jax.device_count()
@@ -88,7 +138,7 @@ def main():
     jax.block_until_ready(r2.best_density)
     print(
         f"[two-phase]  rho={float(r2.best_density):.4f} passes={int(r2.passes)} "
-        f"wall={time.time() - t0:.1f}s (phase-2 ids compacted 11x)"
+        f"wall={time.time() - t0:.1f}s (phase-2 ids compacted)"
     )
 
     # ---- 4. Count-Sketch memory mode (paper §5.1) -------------------------
@@ -104,7 +154,7 @@ def main():
 
     assert abs(rho_stream - rho_dist) < 1e-3
     assert abs(float(r2.best_density) - rho_dist) < 1e-3
-    print("\nall three exact modes agree ✓")
+    print("\nall exact modes agree ✓")
 
 
 if __name__ == "__main__":

@@ -84,7 +84,11 @@ from repro.core.peel_directed import (
     densest_subgraph_directed,
 )
 from repro.core.peel_topk import densest_subgraph_at_least_k
-from repro.core.streaming import StreamingDensest, chunked_from_arrays
+from repro.core.streaming import (
+    StreamingDensest,
+    chunked_from_arrays,
+    chunked_from_memmap,
+)
 
 # Deprecated result-type aliases (kept importable; warn on access).
 __getattr__ = deprecated_alias_getattr(
@@ -117,6 +121,7 @@ __all__ = [
     "c_grid",
     "charikar_greedy",
     "chunked_from_arrays",
+    "chunked_from_memmap",
     "default_solver",
     "densest_directed_brute",
     "densest_directed_search",

@@ -159,9 +159,14 @@ class Problem:
     # Mesh substrate parameters.
     edge_axes: Tuple[str, ...] = ("data",)
     wire_dtype: str = "f32"  # f32 | bf16 degree-psum wire format
-    # Streaming substrate parameters.
+    # Streaming substrate parameters.  ``stream_prefetch`` bounds the chunks
+    # resident in the async pipeline; ``spill_dir`` sends the geometric
+    # ladder's rebuilt survivor streams to disk-backed memmaps (out-of-core
+    # compaction; None keeps survivors in host RAM).
     stream_chunk: int = 1 << 20
     stream_workers: int = 4
+    stream_prefetch: int = 8
+    spill_dir: Optional[str] = None
 
     def __post_init__(self):
         if self.objective not in _OBJECTIVES:
@@ -190,6 +195,10 @@ class Problem:
             )
         if self.wire_dtype not in ("f32", "bf16"):
             raise ValueError(f"wire_dtype={self.wire_dtype!r} not in (f32, bf16)")
+        if self.stream_prefetch < 1:
+            raise ValueError(
+                f"stream_prefetch={self.stream_prefetch} must be >= 1"
+            )
         if not isinstance(self.edge_axes, tuple):
             object.__setattr__(self, "edge_axes", tuple(self.edge_axes))
 
@@ -262,6 +271,19 @@ class Problem:
                 "the streaming driver compacts geometrically; use "
                 "compaction='geometric' or 'off' with substrate='streaming'"
             )
+        if (
+            p.spill_dir is not None
+            and p.substrate == "streaming"
+            and p.compaction != "geometric"
+        ):
+            # (On non-streaming substrates stream_* knobs — spill_dir
+            # included — are uniformly ignored, per the irrelevant-knob
+            # convention the program-cache keys rely on.)
+            raise ValueError(
+                "spill_dir is the streaming ladder's disk spill; a "
+                "streaming solve needs compaction='geometric' (or 'auto') "
+                "to use it"
+            )
         if p.objective == "directed" and p.backend == "pallas":
             raise ValueError(
                 "the tiled-degree kernel counts both endpoints (undirected); "
@@ -327,7 +349,10 @@ class DenseSubgraphResult:
     alive: jax.Array  # bool[N] final S bitmap
     t_alive: jax.Array  # bool[N] final T bitmap | bool[0]
     history_n: jax.Array  # int32[hist] per-pass |S| (-1 padding)
-    history_m: jax.Array  # float32[hist] per-pass |E(S)|
+    # Per-pass edge mass of S.  jit/mesh record the alive WEIGHT total; the
+    # streaming substrate records the alive edge COUNT (its O(n)-state
+    # contract) — identical for unit weights.
+    history_m: jax.Array  # float32[hist]
     history_rho: jax.Array  # float32[hist] per-pass rho
     extras: Optional[Dict[str, Any]] = None
     provenance: Optional[Provenance] = dataclasses.field(
@@ -653,7 +678,9 @@ class Solver:
         if problem.substrate != "mesh":
             exclude |= {"edge_axes", "wire_dtype"}
         # Programs are never built for the streaming substrate.
-        exclude |= {"stream_chunk", "stream_workers"}
+        exclude |= {
+            "stream_chunk", "stream_workers", "stream_prefetch", "spill_dir",
+        }
         return (
             kind,
             _fields_key(problem, exclude),
@@ -1310,7 +1337,11 @@ class Solver:
         resume: bool,
     ) -> DenseSubgraphResult:
         """Semi-streaming substrate: chunked multi-pass driver with O(n)
-        node state (StreamingDensest keeps the checkpoint/straggler logic)."""
+        node state (StreamingDensest keeps the checkpoint/straggler logic).
+        ``stream_prefetch`` bounds the async pipeline's resident chunks and
+        ``spill_dir`` sends ladder rebuilds to disk-backed memmaps; the
+        result's ``extras['streaming']`` reports the pipeline's residency
+        and straggler/compaction counters."""
         from repro.core.streaming import StreamingDensest, chunked_from_arrays
 
         mask = np.asarray(graph.mask)
@@ -1323,9 +1354,20 @@ class Solver:
             eps=prob.eps,
             checkpoint_dir=checkpoint_dir,
             n_workers=prob.stream_workers,
+            prefetch=prob.stream_prefetch,
+            spill_dir=prob.spill_dir,
             compaction="geometric" if prob.compaction == "geometric" else "off",
         )
         st = drv.run(max_passes=prob.max_passes, resume=resume)
+        extras = {
+            "streaming": {
+                "peak_resident_chunks": drv.peak_resident_chunks,
+                "peak_resident_edges": drv.peak_resident_edges,
+                "speculative_reissues": drv.speculative_reissues,
+                "compactions": drv.compactions,
+                "spill_rungs": drv.spill_rungs,
+            }
+        }
         mp = prob.resolved_max_passes(graph.n_nodes)
         hist = np.asarray(st.history, np.float64).reshape(-1, 3)
         best_alive = jnp.asarray(st.best_alive)
@@ -1341,7 +1383,7 @@ class Solver:
             history_m=jnp.asarray(hist[:, 1], jnp.float32),
             history_rho=jnp.asarray(hist[:, 2], jnp.float32),
         )
-        return self._wrap(out, prob, graph.n_nodes, mp, cache_hit=False)
+        return self._wrap(out, prob, graph.n_nodes, mp, cache_hit=False, extras=extras)
 
     # -- solve_batch --------------------------------------------------------
     def solve_batch(

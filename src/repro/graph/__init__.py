@@ -1,3 +1,21 @@
-from repro.graph.edgelist import EdgeList, dedup_edges, from_numpy, to_csr
+from repro.graph.edgelist import (
+    EdgeList,
+    EdgeSpillWriter,
+    dedup_edges,
+    from_numpy,
+    open_edge_spill,
+    open_edges_memmap,
+    save_edges_memmap,
+    to_csr,
+)
 
-__all__ = ["EdgeList", "dedup_edges", "from_numpy", "to_csr"]
+__all__ = [
+    "EdgeList",
+    "EdgeSpillWriter",
+    "dedup_edges",
+    "from_numpy",
+    "open_edge_spill",
+    "open_edges_memmap",
+    "save_edges_memmap",
+    "to_csr",
+]
