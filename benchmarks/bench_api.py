@@ -53,7 +53,12 @@ def main(argv=None) -> int:
         mask=edges.mask[perm], n_nodes=edges.n_nodes,
     )
     m = int(edges.num_real_edges())
-    prob = Problem.undirected(eps=args.eps, max_passes=args.max_passes)
+    # compaction pinned off: this bench tracks the ONE-program cache path
+    # (cold vs cached latency, retrace counts); the ladder default would
+    # add per-rung programs.  The ladder has its own tracked baseline in
+    # bench_peel_compaction.py.
+    prob = Problem.undirected(eps=args.eps, max_passes=args.max_passes,
+                              compaction="off")
     report = {
         "n_nodes": args.n,
         "n_edges": m,
@@ -84,7 +89,9 @@ def main(argv=None) -> int:
     eps_grid = [round(0.1 + 0.1 * i, 3) for i in range(args.grid)]
     batch_solver = Solver()
     batch_cold, _ = _timed(
-        lambda: batch_solver.solve_batch(edges, Problem.undirected(max_passes=args.max_passes), eps=eps_grid)
+        lambda: batch_solver.solve_batch(
+            edges, Problem.undirected(max_passes=args.max_passes), eps=eps_grid
+        )
     )
     batch_warm = min(
         _timed(
@@ -96,7 +103,10 @@ def main(argv=None) -> int:
     )
 
     seq_solver = Solver()
-    probs = [Problem.undirected(eps=e, max_passes=args.max_passes) for e in eps_grid]
+    probs = [
+        Problem.undirected(eps=e, max_passes=args.max_passes, compaction="off")
+        for e in eps_grid
+    ]
     for p in probs:  # warm every per-eps program
         seq_solver.solve(edges, p)
 

@@ -1,0 +1,144 @@
+"""Documentation checks: keep README.md and docs/ honest.
+
+Two checks (CI runs both; the link check also runs in tier-1 via
+tests/test_docs.py):
+
+1. **Link check** (``--links-only``): every repo path referenced from
+   README.md and docs/*.md (``src/...``, ``tests/...``, markdown link
+   targets, and dotted ``repro.*`` module names) must exist.  Catches the
+   classic rot where a doc keeps pointing at a module a refactor moved.
+
+2. **README snippet smoke**: the first ```python fenced block of README.md
+   (the 30-second quickstart) is extracted and executed VERBATIM in a
+   subprocess, so the front-door example on the landing page can never
+   silently break.
+
+Run from the repo root::
+
+    PYTHONPATH=src python scripts/check_docs.py          # both checks
+    python scripts/check_docs.py --links-only            # fast, no jax
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# Path-like tokens rooted at a known top-level directory, e.g.
+# ``src/repro/core/api.py`` or ``examples/quickstart.py``.
+_PATH_RE = re.compile(
+    r"\b(?:src|tests|benchmarks|examples|docs|experiments|scripts)"
+    r"/[\w./-]+\b"
+)
+# Markdown link targets: [text](target).
+_MDLINK_RE = re.compile(r"\]\(([^)#\s]+)\)")
+# Dotted module references, e.g. ``repro.core.mapreduce.mesh_compact_edges``.
+_MODULE_RE = re.compile(r"\brepro(?:\.\w+)+")
+
+
+def _doc_files():
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += [
+            os.path.join(docs, f) for f in sorted(os.listdir(docs))
+            if f.endswith(".md")
+        ]
+    return files
+
+
+def _check_module_token(token: str):
+    """``repro.a.b.c`` resolves component by component under src/repro;
+    once a ``.py`` file is hit, the rest are attributes.  Only the FINAL
+    component may be an attribute of a package (e.g. ``repro.core.solve``);
+    an unresolvable middle component is a rotted reference."""
+    parts = token.split(".")[1:]  # drop the leading "repro"
+    path = os.path.join(REPO, "src", "repro")
+    for i, comp in enumerate(parts):
+        as_dir = os.path.join(path, comp)
+        as_py = as_dir + ".py"
+        if os.path.isdir(as_dir):
+            path = as_dir
+            continue
+        if os.path.isfile(as_py):
+            return None  # rest are attributes of the module
+        if i == len(parts) - 1:
+            return None  # attribute of a package (repro.core.solve)
+        return f"module reference {token!r}: {comp!r} not found under {path}"
+    return None
+
+
+def check_links() -> list:
+    errors = []
+    for doc in _doc_files():
+        rel = os.path.relpath(doc, REPO)
+        text = open(doc).read()
+        # Path and module tokens are checked EVERYWHERE, fenced code blocks
+        # included — an example that imports a moved module is still rot.
+        # Path tokens are repo-rooted; markdown link targets resolve the
+        # way GitHub renders them — relative to the CONTAINING document.
+        targets = {(t, REPO) for t in _PATH_RE.findall(text)}
+        for m in _MDLINK_RE.finditer(text):
+            t = m.group(1)
+            if not t.startswith(("http://", "https://", "mailto:")):
+                targets.add((t, os.path.dirname(doc)))
+        for t, base in sorted(targets):
+            p = os.path.normpath(os.path.join(base, t.rstrip("/").rstrip(".")))
+            if not os.path.exists(p):
+                errors.append(f"{rel}: referenced path {t!r} does not exist")
+        for token in sorted(set(_MODULE_RE.findall(text))):
+            err = _check_module_token(token)
+            if err:
+                errors.append(f"{rel}: {err}")
+    return errors
+
+
+def extract_readme_snippet() -> str:
+    text = open(os.path.join(REPO, "README.md")).read()
+    m = re.search(r"```python\n(.*?)```", text, re.DOTALL)
+    if not m:
+        raise SystemExit("README.md has no ```python quickstart block")
+    return m.group(1)
+
+
+def run_readme_snippet() -> int:
+    snippet = extract_readme_snippet()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "readme_quickstart.py")
+        with open(path, "w") as f:
+            f.write(snippet)
+        print("--- running README quickstart snippet verbatim ---")
+        proc = subprocess.run([sys.executable, path], env=env, cwd=td)
+    return proc.returncode
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip the snippet execution (no jax import)")
+    args = ap.parse_args(argv)
+
+    errors = check_links()
+    for e in errors:
+        print(f"LINK ERROR: {e}", file=sys.stderr)
+    n_docs = len(_doc_files())
+    print(f"link check: {n_docs} docs scanned, {len(errors)} errors")
+    if errors:
+        return 1
+    if args.links_only:
+        return 0
+    return run_readme_snippet()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -74,6 +74,7 @@ from repro.core.mapreduce import (
     make_distributed_directed_peel,
     make_distributed_peel,
     make_distributed_peel_compacted,
+    make_distributed_peel_ladder,
     shard_edges,
 )
 from repro.core.peel import densest_subgraph, densest_subgraph_sets
@@ -138,6 +139,7 @@ __all__ = [
     "make_distributed_directed_peel",
     "make_distributed_peel",
     "make_distributed_peel_compacted",
+    "make_distributed_peel_ladder",
     "make_sketch_params",
     "max_passes_bound",
     "query_degrees",

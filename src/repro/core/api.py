@@ -66,7 +66,7 @@ from repro.core.engine import (
     run_peel,
 )
 from repro.graph.edgelist import EdgeList
-from repro.graph.partition import pow2_bucket
+from repro.graph.partition import ladder_schedule, pow2_bucket
 
 __all__ = [
     "DenseSubgraphResult",
@@ -97,6 +97,16 @@ _AUTO_SKETCH_NODES = 1_000_000
 _COMPACT_MIN_EDGES = 256
 _COMPACT_MIN_NODES = 128
 _COMPACT_MAX_SEGMENTS = 64  # runaway guard; ladders are O(log m) deep
+# Single-program mesh ladder: rung capacities shrink by this factor.  4 is
+# the measured sweet spot on the tracked benchmark — halving rungs double
+# the compaction-collective count for edge-slot savings the pass cost no
+# longer dominates (see benchmarks/bench_peel_compaction.py).
+_LADDER_STRIDE = 4
+# ...and its bucket floor: below this many (global) edge slots a pass is
+# trivial, but every extra rung still pays its fixed while-loop/compaction
+# cost inside the program, so the ladder stops coarser than the host
+# schedule's _COMPACT_MIN_EDGES.
+_LADDER_MIN_EDGES = 4096
 
 
 # ---------------------------------------------------------------------------
@@ -108,25 +118,93 @@ _COMPACT_MAX_SEGMENTS = 64  # runaway guard; ladders are O(log m) deep
 class Problem:
     """What to solve.  Frozen and hashable: the static half of a Solver
     cache key.  Use the :meth:`undirected` / :meth:`at_least_k` /
-    :meth:`directed` constructors for the common cases.
+    :meth:`directed` constructors for the common cases; 30-second tour::
 
-    ``backend='auto'`` picks sketch above ~1M nodes, exact otherwise;
-    ``substrate='auto'`` picks mesh when a mesh was supplied and more than
-    one device is visible, jit otherwise.  ``c=None`` with the directed
-    objective means "search the geometric c-grid" (resolution ``c_delta``),
-    the paper's practical recipe.
+        from repro.core import Problem, solve
+        res = solve(edges, Problem.undirected(eps=0.5))
+        res.best_density, res.nodes(), res.provenance
 
-    ``compaction`` is the engine's runtime-scheduling knob (amortized-O(m)
-    peeling): ``'geometric'`` runs the peel loop in segments and gathers
-    survivors (edges AND nodes) into the next power-of-two buffer whenever
-    the alive edge count falls below half the current padded buffer, so
-    pass k costs O(m_k) instead of O(m); ``'twophase'`` compacts exactly
-    once after ``twophase_passes`` passes (the historical
-    ``make_distributed_peel_twophase`` schedule); ``'auto'`` picks
-    geometric for the exact/pallas backends and off otherwise (Count-Sketch
-    degree estimates depend on node ids, so compaction would change them).
-    Compaction is pure renumbering: results are bit-identical to
-    ``'off'`` for integer-valued edge weights (e.g. unweighted graphs).
+    Field-by-field reference (fields marked *cache-key-exempt* never force
+    a recompile: the Solver drops them from program-cache keys whenever the
+    resolved cell does not read them — see :meth:`Solver._key`):
+
+    **Objective** (which algorithm):
+
+    * ``objective`` — ``'undirected'`` (Alg 1), ``'at_least_k'`` (Alg 2),
+      ``'directed'`` (Alg 3).
+    * ``eps`` — slack of the removal threshold ``2(1+eps)·rho``; drives
+      both the approximation factor and the O(log n / eps) pass bound.
+    * ``k`` — Alg 2 only: minimum ``|S|``.
+    * ``c`` — Alg 3 only: the ``|S|/|T|`` ratio guess; ``None`` sweeps the
+      geometric c-grid (resolution ``c_delta``), the paper's practical
+      recipe.  ``c`` enters compiled programs as a RUNTIME scalar, so the
+      whole grid shares one compilation (cache-key-exempt on those kinds).
+    * ``c_delta`` — grid ratio (> 1); host-side only, cache-key-exempt.
+    * ``max_passes`` — static trip count; ``None`` means the Lemma 4 bound
+      (doubled for directed, Lemma 13).  Keys the cache via its resolved
+      value.
+    * ``track_history`` — record per-pass ``(|S|, edge mass, rho)``.
+
+    **Backend** (how induced degrees are computed):
+
+    * ``backend`` — ``'exact'`` (segment_sum), ``'sketch'`` (§5.1
+      Count-Sketch), ``'pallas'`` (tiled TPU kernel), or ``'auto'``
+      (sketch above ~1M nodes, exact otherwise; exact when a ladder or the
+      streaming substrate constrains it).
+    * ``sketch_tables`` / ``sketch_buckets`` / ``sketch_seed`` — §5.1
+      table geometry; cache-key-exempt unless the sketch backend runs.
+    * ``sketch_node_chunk`` — mesh sketch only: degree-query streaming
+      chunk (bounds the transient query footprint).
+    * ``tile_size`` / ``tile_block`` — Pallas tile geometry;
+      cache-key-exempt unless the pallas backend runs.
+    * ``pallas_interpret`` — ``None`` = compiled on TPU, interpreter
+      elsewhere; ``True`` forces interpret mode.
+
+    **Substrate** (how the loop is launched):
+
+    * ``substrate`` — ``'jit'``, ``'mesh'`` (shard_map over an
+      edge-sharded device mesh, §5.2; needs ``solve(..., mesh=...)``),
+      ``'streaming'`` (host-chunked driver, O(n) node state), or
+      ``'auto'`` (mesh iff a mesh was supplied and >1 device is visible).
+    * ``edge_axes`` / ``wire_dtype`` — mesh only: shard axes and the
+      degree-psum wire format (``'bf16'`` halves the dominant collective);
+      cache-key-exempt elsewhere.
+    * ``stream_chunk`` / ``stream_workers`` — streaming chunk size and
+      worker pool.
+    * ``stream_prefetch`` — bounds the chunks resident in the async
+      pipeline (the out-of-core memory contract; bit-identical to the
+      synchronous order for every setting).
+    * ``spill_dir`` — sends the streaming ladder's rebuilt survivor
+      streams to disk-backed memmaps (atomic manifest, resume re-enters
+      mid-rung).  Needs the geometric ladder: rejected on the streaming
+      substrate with an explicit ``compaction='off'``/``'twophase'``.
+    * ``residency_cap_edges`` — errors a too-big IN-RAM streaming rebuild
+      instead of spiking memory (the spilled path is exempt — that is its
+      point); pair it with ``spill_dir`` to make the cap recoverable.
+      All ``stream_*``/``spill_dir``/``residency_cap_edges`` knobs are
+      host-side driver state: uniformly cache-key-exempt, and ignored on
+      non-streaming substrates (the irrelevant-knob convention).
+
+    **Compaction runtime** (the scheduling knob; host/ladder state, so the
+    whole group is cache-key-exempt — segment programs key on bucket
+    shapes instead):
+
+    * ``compaction`` — ``'off'``: classic single-segment loop;
+      ``'geometric'``: the amortized-O(m) ladder — run in segments, gather
+      survivors into the next power-of-two bucket when the alive edge
+      count falls below the trigger (on the mesh substrate the WHOLE
+      ladder is one compiled collective-only program); ``'twophase'``:
+      exactly one compaction after ``twophase_passes`` passes (the
+      historical ``make_distributed_peel_twophase`` schedule); ``'auto'``
+      (DEFAULT): geometric for exact/pallas, off for sketch (Count-Sketch
+      estimates hash node ids, so renumbering would change them).
+      Compaction is pure renumbering: results are bit-identical to
+      ``'off'`` for integer-valued edge weights (e.g. unweighted graphs).
+      See docs/compaction.md.
+    * ``twophase_passes`` — twophase phase-1 pass budget.
+    * ``min_deg_fallback`` / ``ceil_count`` — Alg 2 realization variants
+      (floor+fallback = single-device legacy, ceil without = distributed
+      legacy); cache-key-exempt for other objectives.
     """
 
     objective: str = "undirected"
@@ -138,8 +216,10 @@ class Problem:
     substrate: str = "jit"
     max_passes: Optional[int] = None  # None -> Lemma 4/13 bound
     track_history: bool = False
-    # Compaction runtime (host-side scheduling; never keys compiled programs).
-    compaction: str = "off"  # off | twophase | geometric | auto
+    # Compaction runtime (scheduling; never keys compiled programs).  The
+    # default is 'auto' (ROADMAP soak item, flipped after PRs 3-4): exact and
+    # pallas backends ride the geometric ladder by default, sketch stays off.
+    compaction: str = "auto"  # off | twophase | geometric | auto
     twophase_passes: int = 8  # compaction='twophase': phase-1 pass budget
     # Algorithm 2 realization knobs (floor+fallback = single-device legacy,
     # ceil w/o fallback = distributed legacy).
@@ -167,6 +247,7 @@ class Problem:
     stream_workers: int = 4
     stream_prefetch: int = 8
     spill_dir: Optional[str] = None
+    residency_cap_edges: Optional[int] = None
 
     def __post_init__(self):
         if self.objective not in _OBJECTIVES:
@@ -198,6 +279,10 @@ class Problem:
         if self.stream_prefetch < 1:
             raise ValueError(
                 f"stream_prefetch={self.stream_prefetch} must be >= 1"
+            )
+        if self.residency_cap_edges is not None and self.residency_cap_edges < 1:
+            raise ValueError(
+                f"residency_cap_edges={self.residency_cap_edges} must be >= 1"
             )
         if not isinstance(self.edge_axes, tuple):
             object.__setattr__(self, "edge_axes", tuple(self.edge_axes))
@@ -663,7 +748,7 @@ class Solver:
         # programs key on (seg max_passes, compact_below) via mp/aux instead,
         # so geometric and twophase ladders share bucket programs.
         exclude = {"max_passes", "c_delta", "compaction", "twophase_passes"}
-        if kind in ("solve", "mesh", "c", "cseg", "cseg_mesh"):
+        if kind in ("solve", "mesh", "c", "cseg", "cseg_mesh", "ladder_mesh"):
             exclude.add("c")  # these programs take c as a runtime argument
         if kind == "eps":
             exclude.add("eps")
@@ -680,6 +765,7 @@ class Solver:
         # Programs are never built for the streaming substrate.
         exclude |= {
             "stream_chunk", "stream_workers", "stream_prefetch", "spill_dir",
+            "residency_cap_edges",
         }
         return (
             kind,
@@ -902,6 +988,256 @@ class Solver:
         fn, _, _ = self._mesh_fn(problem.resolve(n_nodes), mesh, n_nodes)
         return fn
 
+    # -- single-program mesh ladder (collective-only compaction) ------------
+    def _build_mesh_ladder_program(
+        self,
+        problem: Problem,
+        mp: int,
+        mesh,
+        n_nodes: int,
+        schedule: Tuple[int, ...],
+    ) -> Callable:
+        """The WHOLE geometric compaction ladder as ONE ``jit(shard_map)``
+        program (mesh substrate): every rung's peel segment AND the
+        compaction between rungs run inside the compiled program, so a
+        multi-device run is collective-only end to end — no host
+        gather/reshard per rung (the ``_run_compacted`` schedule's mesh cost
+        this replaces).
+
+        ``schedule`` is the static Lemma-4 bucket ladder
+        (:func:`~repro.graph.partition.ladder_schedule`): per-shard edge
+        capacities descending geometrically from the padded input (half
+        first, then a stride of ``_LADDER_STRIDE``).  Rung ``i`` peels with
+        its psummed alive-edge trigger at the NEXT rung's (global)
+        capacity — half occupancy for rung 0, like the host ladder's
+        trigger; a quarter for the stride-4 tail — so on trigger exit the
+        survivors provably fit rung ``i+1``; survivor edges are then
+        prefix-sum compacted and redistributed with an all-gather
+        (:func:`~repro.core.mapreduce.mesh_compact_edges`).  Node bitmaps
+        stay replicated in the FULL id space (no static bound exists on
+        isolated-but-alive nodes, so node renumbering stays a host-ladder
+        concern); since compaction is pure edge re-bucketing here, results
+        are bit-identical to the host ladder and to ``compaction='off'`` for
+        integer-valued weights.
+
+        Returns ``fn(src, dst, weight, mask[, c]) -> (PeelOutcome,
+        rung_t)`` where the edge arrays carry ``schedule[0] * n_shards``
+        slots sharded over ``edge_axes`` and ``rung_t`` is the int32[R]
+        absolute pass counter after each rung (the ladder report's
+        per-rung passes, fetched with the result in the same launch).
+        """
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+        from repro.core.mapreduce import mesh_compact_edges
+
+        axes = tuple(problem.edge_axes)
+        n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+        backend = MeshSegmentSumBackend(axes, problem.wire_dtype)
+        solver = self
+        directed = problem.objective == "directed"
+        n_rungs = len(schedule)
+        hist_len = mp if problem.track_history else 1
+
+        def ladder_local(src, dst, weight, mask, c=None):
+            policy = _policy_for(problem, c=c)
+            n = n_nodes
+            empty = jnp.zeros((0,), bool)
+            alive = jnp.ones((n,), bool)
+            ta = jnp.ones((n,), bool) if directed else empty
+            # Best-set seed matches the uncompacted loop's best0=alive0: if
+            # no pass ever records an eligible set, the full set comes back.
+            best_alive = jnp.ones((n,), bool)
+            best_t = jnp.ones((n,), bool) if directed else empty
+            best_rho = jnp.asarray(-jnp.inf, jnp.float32)
+            best_size = jnp.asarray(0, jnp.int32)
+            t = jnp.asarray(0, jnp.int32)
+            # Entry count of rung 0: one psum over the input mask (every
+            # masked edge has both endpoints alive at t=0); later rungs
+            # reuse the survivor count the compaction just gathered.
+            ae = backend.count_edges(mask)
+            hist_n = jnp.full((hist_len,), -1, jnp.int32)
+            hist_m = jnp.zeros((hist_len,), jnp.float32)
+            hist_rho = jnp.zeros((hist_len,), jnp.float32)
+            rung_t = []
+            for i, cap in enumerate(schedule):
+                last = i == n_rungs - 1
+                # The trigger sits at the NEXT rung's capacity: a rung only
+                # exits early once its survivors provably fit there.
+                compact_below = None if last else schedule[i + 1] * n_shards
+                edges_i = EdgeList(
+                    src=src, dst=dst, weight=weight, mask=mask, n_nodes=n
+                )
+                out = run_peel(
+                    edges_i, policy, backend, mp,
+                    track_history=problem.track_history,
+                    init_alive=alive,
+                    init_t_alive=ta if directed else None,
+                    init_t=t, init_best_empty=True,
+                    compact_below=compact_below,
+                    init_alive_edges=ae, init_ok_from_mask=True,
+                    with_edge_state=not last,
+                )
+                if not last:
+                    # The carried post-removal filter and its psummed count
+                    # ARE the compaction inputs — no re-filter, no re-count.
+                    out, edge_ok, ae = out
+                alive = out.alive
+                if directed:
+                    ta = out.t_alive
+                t = out.passes
+                # Strict >: the earliest rung (pass) wins ties, as in the
+                # single-segment loop and the host ladder.
+                improved = out.best_density > best_rho
+                best_alive = jnp.where(improved, out.best_alive, best_alive)
+                if directed:
+                    best_t = jnp.where(improved, out.best_t, best_t)
+                best_rho = jnp.where(improved, out.best_density, best_rho)
+                best_size = jnp.where(improved, out.best_size, best_size)
+                if problem.track_history:
+                    # Absolute pass indexing: rungs write disjoint slots.
+                    sel = out.history_n >= 0
+                    hist_n = jnp.where(sel, out.history_n, hist_n)
+                    hist_m = jnp.where(sel, out.history_m, hist_m)
+                    hist_rho = jnp.where(sel, out.history_rho, hist_rho)
+                rung_t.append(t)
+                if not last:
+                    src, dst, weight, mask = mesh_compact_edges(
+                        src, dst, weight, edge_ok, ae, schedule[i + 1], axes,
+                    )
+            outcome = PeelOutcome(
+                best_alive=best_alive,
+                best_t=best_t,
+                best_density=best_rho,
+                best_size=best_size,
+                passes=t,
+                alive=alive,
+                t_alive=ta,
+                history_n=hist_n,
+                history_m=hist_m,
+                history_rho=hist_rho,
+            )
+            return outcome, jnp.stack(rung_t)
+
+        in_specs = (P(axes),) * 4 + ((P(),) if directed else ())
+        mapped = shard_map(
+            ladder_local, mesh=mesh, in_specs=in_specs,
+            out_specs=(P(), P()), check_vma=False,
+        )
+
+        def fn(*args):
+            solver._mark_trace()
+            return mapped(*args)
+
+        return jax.jit(fn)
+
+    def mesh_ladder_program(
+        self, problem: Problem, mesh, n_nodes: int, m_edges: int
+    ) -> Tuple[Callable, Tuple[int, ...], int, bool]:
+        """The cached single-program mesh ladder for a graph with ``m_edges``
+        edge slots: ``(fn, schedule, n_shards, hit)`` where ``fn(src, dst,
+        weight, mask[, c]) -> (PeelOutcome, rung_t)`` expects the edge
+        arrays padded to ``schedule[0] * n_shards`` slots and sharded over
+        ``problem.edge_axes`` — the lowering target of
+        :func:`~repro.core.mapreduce.make_distributed_peel_ladder` and of
+        ``solve()`` for mesh × ``compaction='geometric'``.  The program
+        cache key includes the static bucket schedule; rung 0 is the exact
+        shard-rounded input size, so only graphs with the SAME padded edge
+        count share a compilation (repeat solves and the whole directed
+        c-grid do — c is a runtime scalar)."""
+        prob = problem.resolve(n_nodes, have_mesh=True)
+        axes = tuple(prob.edge_axes)
+        n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+        shard_m0 = -(-max(int(m_edges), 1) // n_shards)  # ceil division
+        # Rung 0 is the INPUT buffer: it keeps its exact (shard-rounded)
+        # size — pow2 bucketing there would only pad the heaviest passes.
+        # Its trigger fires at HALF occupancy (rung 1 = pow2(m0/2), the
+        # host ladder's trigger point — low-eps runs shrink slowly and
+        # need the early compact); after that the tail descends by
+        # _LADDER_STRIDE, pow2-bucketed so every later rung's program is
+        # shared across graphs landing on the same bucket.
+        floor = pow2_bucket(max(1, _LADDER_MIN_EDGES // n_shards))
+        half = pow2_bucket(-(-shard_m0 // 2), floor)
+        tail = ladder_schedule(
+            max(half // _LADDER_STRIDE, 1), floor=floor,
+            stride=_LADDER_STRIDE,
+        )
+        schedule = (shard_m0,)
+        schedule += (half,) if half < shard_m0 else ()
+        # ladder_schedule clamps its floor down when the top is already
+        # smaller; keep only tail rungs at or above the REAL floor (a
+        # sub-floor rung would pay its fixed cost for a trivial pass).
+        schedule += tuple(c for c in tail if c < schedule[-1] and c >= floor)
+        mp = prob.resolved_max_passes(n_nodes)
+        key = self._key(
+            "ladder_mesh", prob, mp, n_nodes, -1, "sharded", None,
+            (mesh, schedule),
+        )
+        fn, hit = self._get(
+            key,
+            lambda: self._build_mesh_ladder_program(
+                prob, mp, mesh, n_nodes, schedule
+            ),
+        )
+        return fn, schedule, n_shards, hit
+
+    def _mesh_ladder_runner(
+        self, graph: EdgeList, prob: Problem, mesh
+    ) -> Callable[[Optional[float]], Tuple[PeelOutcome, Dict[str, Any], bool]]:
+        """``_run_compacted``'s mesh × geometric replacement: pads and
+        shards the graph ONCE, then returns ``run(c)`` launching the
+        single-program ladder (collective-only; zero host gather/reshard
+        round-trips between rungs) — the directed c-grid reuses both the
+        sharded arrays and the compiled program across all its c values,
+        like the uncompacted mesh path."""
+        from repro.core.mapreduce import shard_edges
+
+        fn, schedule, n_shards, hit = self.mesh_ladder_program(
+            prob, mesh, graph.n_nodes, graph.n_edges_padded
+        )
+        padded = graph.with_padding(schedule[0] * n_shards)
+        sh = shard_edges(padded, mesh, prob.edge_axes)
+        base_args = (sh.src, sh.dst, sh.weight, sh.mask)
+
+        def run(c: Optional[float]) -> Tuple[PeelOutcome, Dict[str, Any], bool]:
+            args = base_args
+            if prob.objective == "directed":
+                args += (jnp.float32(c),)
+            out, rung_t = fn(*args)
+            rung_t = np.asarray(rung_t)
+            segments = []
+            slots = 0
+            prev = 0
+            for i, cap in enumerate(schedule):
+                m_buf = cap * n_shards
+                passes = int(rung_t[i]) - prev
+                prev = int(rung_t[i])
+                slots += passes * m_buf
+                segments.append(
+                    {
+                        "n_buf": int(graph.n_nodes),
+                        "m_buf": m_buf,
+                        "passes": passes,
+                        "compact_below": (
+                            None if i == len(schedule) - 1
+                            else schedule[i + 1] * n_shards
+                        ),
+                        "cache_hit": bool(hit),
+                    }
+                )
+            ladder = {
+                "mode": prob.compaction,
+                "segments": segments,
+                "edge_slots_scanned": int(slots),
+                "passes": int(out.passes),
+                "single_program": True,
+                "host_round_trips": 0,  # vs one gather/reshard per rung
+                "schedule": [cap * n_shards for cap in schedule],
+            }
+            return out, ladder, hit
+
+        return run
+
     # -- compaction ladder (geometric | twophase) ---------------------------
     def _segment_fn(
         self,
@@ -957,6 +1293,12 @@ class Solver:
         reuses the same machinery with a fixed schedule: one compaction
         after ``twophase_passes`` passes (the historical
         ``make_distributed_peel_twophase`` recipe).
+
+        On the mesh substrate this host schedule now serves only
+        ``'twophase'``: mesh × ``'geometric'`` lowers onto the
+        single-program collective-only ladder (:meth:`_mesh_ladder_runner`).
+        Calling this directly with mesh × geometric still runs the host
+        gather/reshard ladder — the benchmark's comparison baseline.
 
         Returns ``(outcome in the ORIGINAL id space, ladder report, all
         segment programs were cache hits)``.
@@ -1156,6 +1498,10 @@ class Solver:
             "segments": segments,
             "edge_slots_scanned": int(slots_scanned),
             "passes": int(t_done),
+            "single_program": False,
+            # Each rung is its own program launch, with a host
+            # gather/relabel (and reshard, on mesh) between rungs.
+            "host_round_trips": len(segments),
         }
         return outcome, ladder, all_hit
 
@@ -1163,9 +1509,19 @@ class Solver:
         self, graph: EdgeList, prob: Problem, mesh
     ) -> DenseSubgraphResult:
         """solve() tail for ``compaction in ('geometric', 'twophase')`` on
-        the jit/mesh substrates (streaming compacts inside its driver)."""
+        the jit/mesh substrates (streaming compacts inside its driver).
+        mesh × geometric lowers onto the SINGLE-PROGRAM ladder
+        (:meth:`_mesh_ladder_runner`, collective-only compaction; the graph
+        is sharded once, reused across the c-grid); everything else runs
+        the host gather/relabel schedule (:meth:`_run_compacted`).
+        """
         if prob.substrate == "mesh" and mesh is None:
             raise ValueError("substrate='mesh' needs solve(..., mesh=Mesh)")
+        if prob.substrate == "mesh" and prob.compaction == "geometric":
+            launch = self._mesh_ladder_runner(graph, prob, mesh)
+            runner = lambda g, p, m, c: launch(c)
+        else:
+            runner = self._run_compacted
         n = graph.n_nodes
         mp = prob.resolved_max_passes(n)
         if prob.objective == "directed" and prob.c is None:
@@ -1176,7 +1532,7 @@ class Solver:
             rhos, passes = [], []
             all_hit = True
             for cv in grid:
-                out, ladder, hit = self._run_compacted(graph, prob, mesh, float(cv))
+                out, ladder, hit = runner(graph, prob, mesh, float(cv))
                 all_hit = all_hit and hit
                 rho = float(out.best_density)
                 rhos.append(rho)
@@ -1192,7 +1548,7 @@ class Solver:
             }
             return self._wrap(best, prob, n, mp, all_hit, extras=extras)
         c = prob.c if prob.objective == "directed" else None
-        out, ladder, hit = self._run_compacted(graph, prob, mesh, c)
+        out, ladder, hit = runner(graph, prob, mesh, c)
         return self._wrap(out, prob, n, mp, hit, extras={"compaction": ladder})
 
     # -- result wrapping ----------------------------------------------------
@@ -1230,15 +1586,36 @@ class Solver:
         checkpoint_dir: Optional[str] = None,
         resume: bool = False,
     ) -> DenseSubgraphResult:
-        """Runs one Problem on one graph.  ``mesh`` is required for the mesh
-        substrate; ``checkpoint_dir``/``resume`` apply to streaming;
-        ``degree_fn`` is the legacy custom-degree hook (keys the cache by
-        identity)."""
+        """Runs one Problem on one graph.
+
+        As in ``examples/quickstart.py``::
+
+            res = solver.solve(edges, Problem.undirected(eps=0.5))
+            rho = float(res.best_density)      # density of the best set
+            nodes = res.nodes()                # its node ids (host-side)
+            res.provenance                     # which matrix cell ran
+
+        ``mesh`` is required for the mesh substrate;
+        ``checkpoint_dir``/``resume`` apply to streaming; ``degree_fn`` is
+        the legacy custom-degree hook (keys the cache by identity).
+        Repeated same-shape solves hit the program cache and never retrace
+        (``trace_count``/``cache_hits`` are the observability counters).
+        """
         if not isinstance(graph, EdgeList):
             raise TypeError(
                 f"solve() takes an EdgeList graph, got {type(graph).__name__}"
             )
         prob = problem.resolve(graph.n_nodes, have_mesh=mesh is not None)
+        if (
+            degree_fn is not None
+            and prob.compaction != "off"
+            and problem.compaction == "auto"
+        ):
+            # Like the sketch downgrade in resolve(): a degree_fn hook binds
+            # one fixed graph, so 'auto' (the default) falls back to the
+            # uncompacted loop instead of erroring — only an EXPLICIT
+            # ladder request conflicts with the hook.
+            prob = dataclasses.replace(prob, compaction="off")
         if prob.substrate != "streaming" and (checkpoint_dir is not None or resume):
             raise ValueError(
                 "checkpoint_dir/resume only apply to substrate='streaming'"
@@ -1356,6 +1733,7 @@ class Solver:
             n_workers=prob.stream_workers,
             prefetch=prob.stream_prefetch,
             spill_dir=prob.spill_dir,
+            residency_cap_edges=prob.residency_cap_edges,
             compaction="geometric" if prob.compaction == "geometric" else "off",
         )
         st = drv.run(max_passes=prob.max_passes, resume=resume)
@@ -1397,6 +1775,13 @@ class Solver:
     ) -> DenseSubgraphResult:
         """One XLA program for a whole sweep (ROADMAP batched driver).
 
+        As in ``examples/quickstart.py``::
+
+            sweep = solver.solve_batch(
+                edges, Problem.undirected(max_passes=64), eps=[0.1, 0.5, 1.0]
+            )
+            sweep.best_density                 # float32[3], one per eps
+
         Exactly one batch axis: ``eps=`` (vector of eps values), ``c=``
         (vector of directed ratio guesses), or a sequence of same-shape
         graphs.  Every array of the result gains a leading sweep axis; the
@@ -1406,7 +1791,10 @@ class Solver:
 
         With ``max_passes=None`` the static trip bound is taken at the
         loosest point of the sweep (min eps); pass an explicit
-        ``Problem.max_passes`` to pin it.
+        ``Problem.max_passes`` to pin it.  Sweeps share ONE vmapped
+        program, so there is no per-lane buffer to compact:
+        ``compaction='auto'`` quietly resolves to off, an explicit ladder
+        raises.
         """
         stacked = isinstance(graph, (list, tuple)) or (
             isinstance(graph, EdgeList) and graph.src.ndim == 2

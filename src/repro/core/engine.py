@@ -108,6 +108,33 @@ def segment_degree_count(
     return deg, jnp.sum(w_alive)
 
 
+def compact_edges(
+    ok: jax.Array, arrays: Tuple[jax.Array, ...], capacity: int
+) -> Tuple[jax.Array, ...]:
+    """The IN-PROGRAM compact step of the segment loop: masked prefix-sum
+    relabeling of edge slots.  Slots where ``ok`` is True are stable-scattered
+    (original order preserved) to the front of fresh ``capacity``-slot zero
+    buffers; everything else lands out of bounds and is dropped.
+
+    Pure and traceable — this is what lets a compaction ladder run entirely
+    inside one compiled program (the mesh ladder pairs it with an all-gather;
+    see ``core/mapreduce.mesh_compact_edges``).  Unlike the host ladder's
+    gather, the target ``capacity`` is STATIC: callers must guarantee the
+    survivor count fits (the ``compact_below`` trigger is exactly that
+    guarantee — a segment only exits below half its buffer, and survivors of
+    a terminated run are never peeled again, so overflow drops are harmless).
+
+    Spelled as prefix-sum + rank search + gather rather than a scatter:
+    ``searchsorted`` finds the k-th survivor's slot, and XLA lowers the
+    gather an order of magnitude faster than the equivalent masked scatter
+    on CPU (measured 8x on the tracked benchmark's rung sizes).
+    """
+    cs = jnp.cumsum(ok.astype(jnp.int32))
+    ranks = jnp.arange(1, capacity + 1, dtype=jnp.int32)
+    idx = jnp.searchsorted(cs, ranks, side="left")  # len(ok) when rank > total
+    return tuple(a.at[idx].get(mode="fill", fill_value=0) for a in arrays)
+
+
 # ---------------------------------------------------------------------------
 # State / outcome — the single pair replacing the old per-loop families
 # ---------------------------------------------------------------------------
@@ -421,6 +448,7 @@ def run_peel(
     compact_below: Optional[int] = None,
     init_alive_edges: Optional[jax.Array] = None,
     init_ok_from_mask: bool = False,
+    with_edge_state: bool = False,
 ) -> PeelOutcome:
     """Runs the peel loop to completion.  Pure and traceable: wrappers add
     ``jit``/``vmap``/``shard_map`` around it (substrate axis).
@@ -444,6 +472,12 @@ def run_peel(
     supplies its count (the survivor count the compaction just computed).
     ``compact_below=None`` is the classic single-segment run — the count
     and the carried mask are never materialized.
+
+    ``with_edge_state`` (requires ``compact_below``) returns ``(outcome,
+    edge_ok, alive_edges)`` instead: the carried post-removal edge filter
+    and its count at exit — exactly the survivor set an in-program
+    compaction needs, already computed by the final pass (the single-program
+    mesh ladder reuses it instead of paying another O(m) filter).
     """
     n = edges.n_nodes
     directed = policy.directed
@@ -552,7 +586,7 @@ def run_peel(
         history_rho=jnp.zeros((hist_len,), jnp.float32),
     )
     out = jax.lax.while_loop(cond, body, init)
-    return PeelOutcome(
+    outcome = PeelOutcome(
         best_alive=out.best_alive,
         best_t=out.best_t,
         best_density=out.best_rho,
@@ -564,6 +598,12 @@ def run_peel(
         history_m=out.history_m,
         history_rho=out.history_rho,
     )
+    if with_edge_state:
+        if compact_below is None:
+            raise ValueError("with_edge_state needs compact_below (the "
+                             "carried filter is only materialized then)")
+        return outcome, out.edge_ok, out.alive_edges
+    return outcome
 
 
 # ---------------------------------------------------------------------------

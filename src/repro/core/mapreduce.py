@@ -70,6 +70,66 @@ def _local_edges(src, dst, weight, mask, n_nodes: int) -> EdgeList:
     return EdgeList(src=src, dst=dst, weight=weight, mask=mask, n_nodes=n_nodes)
 
 
+def flat_shard_index(axes: Sequence[str]) -> jax.Array:
+    """This device's position along the (flattened) edge-shard axis inside
+    ``shard_map`` — the row-major combination of ``lax.axis_index`` over
+    ``axes``, matching both ``PartitionSpec((axes,))`` block order and the
+    concatenation order of ``lax.all_gather(..., axes, tiled=True)``."""
+    return jax.lax.axis_index(tuple(axes))
+
+
+def mesh_compact_edges(
+    src: jax.Array,
+    dst: jax.Array,
+    weight: jax.Array,
+    ok: jax.Array,
+    alive_edges: jax.Array,
+    new_cap: int,
+    axes: Sequence[str],
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One collective compaction step of the single-program mesh ladder
+    (for use INSIDE ``shard_map``): gathers every shard's edges, prefix-sum
+    compacts the survivors (``ok`` — the post-removal edge filter the peel
+    loop already carries; its psummed count is ``alive_edges``, the trigger
+    count every device just agreed on) into the next rung's
+    ``new_cap``-per-shard buffer, and hands each device its new shard — no
+    host gather/reshard, just collectives, and no re-filter/re-count work.
+
+    The all-gather is ``O(m_i)`` and rung sizes shrink geometrically, so
+    the total gather TRAFFIC over the whole ladder telescopes to
+    ``O(m_0)`` — the same order as ONE host round-trip, without ever
+    leaving the compiled program.  Peak per-device RESIDENCY is another
+    matter: the gathered arrays momentarily materialize all ``m_i`` slots
+    on every device, so the rung-0 compaction needs O(m_0) per-device
+    memory — fine whenever the uncompacted graph would fit one device
+    (the regime the tracked benchmark measures), but NOT for graphs
+    sharded precisely because they don't; such runs should keep
+    ``compaction='off'``/``'twophase'`` on the mesh substrate for now (a
+    balanced all_to_all exchange that keeps residency O(m_i / n_shards)
+    is the ROADMAP refinement).  Shards are contiguous blocks in
+    axis-index order, and the prefix-sum scatter is stable, so the
+    surviving edges keep their original global order: degree sums see the
+    same addends in the same order as the host ladder (bit-identical for
+    integer-valued weights).
+
+    Returns ``(src', dst', weight', mask')`` — this device's next-rung
+    shard.
+    """
+    from repro.core.engine import compact_edges
+
+    axes = tuple(axes)
+    g_ok, g_src, g_dst, g_w = (
+        jax.lax.all_gather(x, axes, tiled=True) for x in (ok, src, dst, weight)
+    )
+    n_shards = g_ok.shape[0] // ok.shape[0]
+    total_next = new_cap * n_shards
+    n_src, n_dst, n_w = compact_edges(g_ok, (g_src, g_dst, g_w), total_next)
+    n_mask = jnp.arange(total_next, dtype=jnp.int32) < alive_edges
+    start = flat_shard_index(axes) * new_cap
+    sl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, new_cap)
+    return sl(n_src), sl(n_dst), sl(n_w), sl(n_mask)
+
+
 def make_distributed_peel(
     mesh: Mesh,
     edge_axes: Tuple[str, ...] = ("data",),
@@ -108,11 +168,15 @@ def densest_subgraph_distributed(
     edge_axes: Tuple[str, ...] = ("data",),
     eps: float = 0.5,
     max_passes: Optional[int] = None,
+    compaction: str = "off",
 ) -> DenseSubgraphResult:
-    """Convenience wrapper: shard + run through the front door."""
+    """Convenience wrapper: shard + run through the front door.
+    ``compaction`` is pinned off by default, like every legacy wrapper, so
+    pre-flip outputs stay exact for any weights; pass ``'geometric'`` for
+    the single-program mesh ladder."""
     problem = Problem.undirected(
         eps=eps, max_passes=max_passes, substrate="mesh",
-        edge_axes=tuple(edge_axes),
+        edge_axes=tuple(edge_axes), compaction=compaction,
     )
     return solve(edges, problem, mesh=mesh)
 
@@ -130,12 +194,15 @@ def make_distributed_peel_compacted(
 
     The multi-level generalization of :func:`make_distributed_peel_twophase`:
     whenever the (psummed) alive edge count falls below half the current
-    padded buffer, survivors are gathered on the host, renumbered into the
-    next power-of-two bucket, resharded over ``edge_axes``, and the SAME
-    engine loop continues there — every collective (degree psum, density,
-    edge-count trigger) shrinks with the graph, for amortized-O(m) total
-    work.  Returns ``fn(edges: EdgeList) -> DenseSubgraphResult`` (host
-    scheduling makes this an EdgeList-level entry point, unlike the
+    padded buffer, survivor edges are compacted into the next power-of-two
+    bucket and the SAME engine loop continues there — every edge-level cost
+    shrinks with the graph, for amortized-O(m) total work.  With
+    ``compaction='geometric'`` (the default) the whole ladder now runs as
+    ONE compiled ``shard_map`` program via
+    :func:`make_distributed_peel_ladder`'s lowering (collective-only, no
+    host round-trip per rung); ``compaction='twophase'`` keeps the host
+    gather/relabel schedule.  Returns ``fn(edges: EdgeList) ->
+    DenseSubgraphResult`` (an EdgeList-level entry point, unlike the
     raw-array single-program builders; ``n_nodes``, if given, is validated
     against each graph for signature parity with the sibling builders).
     """
@@ -156,6 +223,62 @@ def make_distributed_peel_compacted(
             )
         return solve(edges, problem, mesh=mesh)
 
+    return run
+
+
+def make_distributed_peel_ladder(
+    mesh: Mesh,
+    edge_axes: Tuple[str, ...] = ("data",),
+    eps: float = 0.5,
+    max_passes: Optional[int] = None,
+    n_nodes: Optional[int] = None,
+    m_edges: Optional[int] = None,
+    wire_dtype: str = "f32",
+):
+    """The single-program mesh compaction ladder: the WHOLE geometric
+    Lemma-4 schedule — every peel segment and every inter-rung compaction —
+    as ONE compiled ``jit(shard_map(...))`` program, collective-only end to
+    end (degree psum + alive-edge trigger psum per pass, one all-gather
+    redistribution per rung; zero host gather/reshard round-trips).
+
+    This is the multi-level generalization of
+    :func:`make_distributed_peel_twophase`'s single-XLA-program idea: the
+    bucket sizes derive statically from the padded edge count — rung ``i``
+    exits below the NEXT rung's capacity (the psummed trigger every device
+    agrees on), so its survivors provably fit there and the full shape
+    ladder is known at trace time
+    (:func:`repro.graph.partition.ladder_schedule`); eps enters as the
+    Lemma-4 pass budget baked into every rung.
+
+    Returns ``run(src, dst, weight, mask) -> PeelOutcome`` over arrays
+    padded to ``run.n_edge_slots`` (= ``run.schedule[0] * n_shards``) and
+    sharded over ``edge_axes`` — signature parity with
+    :func:`make_distributed_peel`.  ``run.schedule`` exposes the static
+    per-shard bucket sizes; for per-rung pass counts and the full ladder
+    report, go through the front door instead — ``solve(...,
+    Problem(substrate='mesh', compaction='geometric'))`` returns it in
+    ``extras['compaction']``.
+    """
+    assert n_nodes is not None
+    assert m_edges is not None, "the static bucket schedule needs m_edges"
+    problem = Problem.undirected(
+        eps=eps,
+        max_passes=max_passes,
+        substrate="mesh",
+        edge_axes=tuple(edge_axes),
+        wire_dtype=wire_dtype,
+        compaction="geometric",
+    )
+    fn, schedule, n_shards, _ = default_solver.mesh_ladder_program(
+        problem, mesh, n_nodes, m_edges
+    )
+
+    def run(src, dst, weight, mask) -> PeelOutcome:
+        out, _rung_t = fn(src, dst, weight, mask)
+        return out
+
+    run.schedule = schedule
+    run.n_edge_slots = schedule[0] * n_shards
     return run
 
 

@@ -43,20 +43,27 @@ def densest_subgraph_directed(
     c: jax.Array | float,
     eps: float = 0.5,
     max_passes: Optional[int] = None,
+    compaction: str = "off",
 ):
     """Algorithm 3 for one value of c (c may be a traced scalar).
 
     With a concrete c this routes through the cached front door and returns
     a :class:`DenseSubgraphResult`; with a TRACED c (inside jit/vmap) it
     returns the engine's raw ``PeelOutcome`` — same arrays, but no
-    ``provenance``/``extras``/host helpers on that branch."""
+    ``provenance``/``extras``/host helpers on that branch.  ``compaction``
+    is pinned off by default, like every legacy wrapper, so pre-flip
+    outputs stay exact for ANY weights — and so both branches agree (the
+    traced-c path runs the classic loop; ``run_cell`` never compacts)."""
     if isinstance(c, jax.core.Tracer):
         # Inside jit/vmap (e.g. a vmapped c-grid): stay on the pure lowering
         # path; the caller owns the compilation.
         prob = Problem.directed(eps=eps, max_passes=max_passes)
         return run_cell(edges, prob, c=c)
     return solve(
-        edges, Problem.directed(c=float(c), eps=eps, max_passes=max_passes)
+        edges,
+        Problem.directed(
+            c=float(c), eps=eps, max_passes=max_passes, compaction=compaction
+        ),
     )
 
 

@@ -23,6 +23,31 @@ def pow2_bucket(x: int, floor: int = 1) -> int:
     return max(floor, 1 << max(int(x) - 1, 0).bit_length())
 
 
+def ladder_schedule(m0: int, floor: int = 1, stride: int = 2) -> Tuple[int, ...]:
+    """The STATIC geometric bucket schedule of the single-program compaction
+    ladder (device-local pow2 re-bucketing): descending per-shard slot
+    capacities ``pow2(m0), pow2(m0)/stride, ..., >= pow2(floor)``.
+
+    Rung ``i`` peels with its ``compact_below`` trigger at the NEXT rung's
+    capacity, so on trigger exit the survivors provably fit rung ``i+1``.
+    That invariant is what makes the whole ladder's shapes computable up
+    front from ``(m0, floor, stride)``, letting every rung live inside ONE
+    compiled ``shard_map`` program (no host gather/reshard between rungs;
+    see ``Problem(compaction='geometric')`` on the mesh substrate).  A
+    larger pow2 ``stride`` trades extra scanned slots (a pass lingers on a
+    buffer up to ``stride``× its survivors) for fewer compaction
+    collectives — total gather traffic is ``m0 · stride/(stride-1)``.
+    """
+    if stride < 2:
+        raise ValueError(f"stride={stride} must be >= 2")
+    top = pow2_bucket(max(int(m0), 1))
+    fl = min(pow2_bucket(max(int(floor), 1)), top)
+    sizes = [top]
+    while sizes[-1] // stride >= fl:
+        sizes.append(sizes[-1] // stride)
+    return tuple(sizes)
+
+
 @dataclasses.dataclass(frozen=True)
 class TiledEdges:
     """Static tiling of (duplicated) edge endpoints.

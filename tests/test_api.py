@@ -298,6 +298,10 @@ def test_solve_batch_needs_exactly_one_axis():
 
 
 def test_solver_cache_no_retrace_same_shape():
+    """The off path compiles exactly one program per (shape, statics).
+    (compaction defaults to 'auto' since the ROADMAP flip, so the one-
+    program expectation needs the explicit 'off'; the ladder-default cache
+    behavior is test_default_compaction_ladder_caches below.)"""
     edges = _und()
     perm = np.random.default_rng(0).permutation(edges.src.shape[0])
     other = EdgeList(
@@ -305,7 +309,7 @@ def test_solver_cache_no_retrace_same_shape():
         mask=edges.mask[perm], n_nodes=edges.n_nodes,
     )
     s = Solver()
-    prob = Problem.undirected(eps=0.5)
+    prob = Problem.undirected(eps=0.5, compaction="off")
     s.solve(edges, prob)
     assert (s.trace_count, s.cache_misses, s.cache_hits) == (1, 1, 0)
     s.solve(other, prob)  # same shapes, different data
@@ -313,8 +317,27 @@ def test_solver_cache_no_retrace_same_shape():
     s.solve(edges, prob)
     assert (s.trace_count, s.cache_misses, s.cache_hits) == (1, 1, 2)
     # A different static field is a different program.
-    s.solve(edges, Problem.undirected(eps=0.25))
+    s.solve(edges, Problem.undirected(eps=0.25, compaction="off"))
     assert s.cache_misses == 2 and s.trace_count == 2
+
+
+def test_default_compaction_ladder_caches():
+    """The DEFAULT Problem now rides the geometric ladder (compaction='auto'
+    -> geometric for exact backends, the ROADMAP flip): the first solve
+    compiles one program per pow2 rung bucket; same-shape re-solves hit the
+    program cache everywhere (no retrace anywhere in the ladder)."""
+    edges = _und()
+    s = Solver()
+    r1 = s.solve(edges, Problem.undirected(eps=0.5))
+    assert r1.provenance.compaction == "geometric"
+    rungs = len(r1.extras["compaction"]["segments"])
+    assert rungs >= 1
+    assert s.trace_count == s.cache_misses  # one trace per rung bucket
+    traces, misses = s.trace_count, s.cache_misses
+    r2 = s.solve(edges, Problem.undirected(eps=0.5))
+    assert (s.trace_count, s.cache_misses) == (traces, misses)
+    assert s.cache_hits == rungs
+    assert r2.provenance.cache_hit
 
 
 def test_solve_batch_eps_keys_fixed_directed_c():
@@ -350,14 +373,27 @@ def test_solve_batch_accepts_prestacked_edgelist():
 
 def test_cache_ignores_fields_the_program_never_reads():
     """Knobs of cells that are not running (streaming params on a jit solve,
-    tile params on an exact backend) must not force a recompile."""
+    tile params on an exact backend) must not force a recompile — on the
+    off path AND on the default ladder's per-rung programs."""
     edges = _und()
     s = Solver()
-    s.solve(edges, Problem.undirected(eps=0.5))
-    s.solve(edges, Problem.undirected(eps=0.5, stream_workers=8, stream_chunk=64))
-    s.solve(edges, Problem.undirected(eps=0.5, tile_size=256, wire_dtype="bf16"))
-    s.solve(edges, Problem.undirected(eps=0.5, c_delta=3.0, sketch_buckets=1 << 8))
+    s.solve(edges, Problem.undirected(eps=0.5, compaction="off"))
+    s.solve(edges, Problem.undirected(eps=0.5, compaction="off",
+                                      stream_workers=8, stream_chunk=64))
+    s.solve(edges, Problem.undirected(eps=0.5, compaction="off",
+                                      tile_size=256, wire_dtype="bf16"))
+    s.solve(edges, Problem.undirected(eps=0.5, compaction="off",
+                                      c_delta=3.0, sketch_buckets=1 << 8))
     assert s.cache_misses == 1 and s.cache_hits == 3 and s.trace_count == 1
+    # Default (auto -> geometric) path: irrelevant knobs may not recompile
+    # any ladder rung either.
+    s2 = Solver()
+    s2.solve(edges, Problem.undirected(eps=0.5))
+    misses, traces = s2.cache_misses, s2.trace_count
+    s2.solve(edges, Problem.undirected(eps=0.5, stream_workers=8, stream_chunk=64))
+    s2.solve(edges, Problem.undirected(eps=0.5, tile_size=256))
+    assert (s2.cache_misses, s2.trace_count) == (misses, traces)
+    assert s2.cache_hits == 2 * misses
 
 
 def test_solve_rejects_silently_dropped_kwargs():
@@ -392,12 +428,14 @@ def test_auto_backend_resolves_exact_for_streaming():
 
 def test_solver_cache_directed_shares_program_across_c():
     """c is a runtime scalar: the whole grid (and any fixed c) reuses ONE
-    compiled program — the paper's ~35-min-per-c cost collapses."""
+    compiled program — the paper's ~35-min-per-c cost collapses.  (Pinned
+    to compaction='off'; the ladder-path analogue is
+    test_compaction_ladder_shares_programs_across_c.)"""
     edges = _dir()
     s = Solver()
-    s.solve(edges, Problem.directed(c=1.0, eps=0.5))
-    s.solve(edges, Problem.directed(c=2.0, eps=0.5))
-    s.solve(edges, Problem.directed(c=None, eps=0.5))  # the full grid
+    s.solve(edges, Problem.directed(c=1.0, eps=0.5, compaction="off"))
+    s.solve(edges, Problem.directed(c=2.0, eps=0.5, compaction="off"))
+    s.solve(edges, Problem.directed(c=None, eps=0.5, compaction="off"))  # grid
     assert s.trace_count == 1
     assert s.cache_misses == 1
     assert s.cache_hits == 2
@@ -524,7 +562,7 @@ def test_compaction_ladder_shares_programs_across_c():
     edges = _dir()
     p1 = Problem.directed(c=0.5, eps=0.5, compaction="geometric").resolve(edges.n_nodes)
     p2 = Problem.directed(c=1.0, eps=0.5, compaction="geometric").resolve(edges.n_nodes)
-    for kind in ("cseg", "cseg_mesh"):
+    for kind in ("cseg", "cseg_mesh", "ladder_mesh"):
         k1 = s._key(kind, p1, 32, 128, 1024, "float32", None, (64,))
         k2 = s._key(kind, p2, 32, 128, 1024, "float32", None, (64,))
         assert k1 == k2
@@ -563,6 +601,8 @@ def test_compaction_zero_pass_runs_match_off(mode):
 
 
 def test_compaction_auto_resolution_and_validation():
+    # 'auto' is the DEFAULT since the ROADMAP flip (PR 5).
+    assert Problem().compaction == "auto"
     # auto -> geometric for exact, off for sketch.
     assert Problem.undirected(compaction="auto").resolve(100).compaction == "geometric"
     # An explicit ladder steers backend='auto' to exact even above the
@@ -590,12 +630,23 @@ def test_compaction_auto_resolution_and_validation():
         edges, Problem.undirected(max_passes=16, compaction="auto"), eps=[0.5]
     )
     assert rb.provenance.compaction == "off"
-    # degree_fn hooks bind one buffer; compaction renumbers them.
+    # degree_fn hooks bind one buffer; an EXPLICIT ladder conflicts...
     with pytest.raises(ValueError):
         solve(
             edges, Problem.undirected(compaction="geometric"),
             degree_fn=lambda e, w: w,
         )
+    # ...but the 'auto' DEFAULT quietly falls back to the uncompacted loop
+    # (regression: the flip used to break every existing degree_fn call).
+    from repro.core.engine import segment_degree_count
+
+    def hook(e, w_alive):
+        return segment_degree_count(e.src, e.dst, w_alive, e.n_nodes)[0]
+
+    s = Solver()
+    r_hook = s.solve(edges, Problem.undirected(eps=0.5), degree_fn=hook)
+    assert r_hook.provenance.compaction == "off"
+    _same_full(r_hook, s.solve(edges, Problem.undirected(eps=0.5, compaction="off")))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,39 @@
+"""Documentation surface stays valid (tier-1 guard for scripts/check_docs.py).
+
+The link check runs in-process (no jax import); the README quickstart
+snippet's verbatim EXECUTION is the CI examples job's step (it compiles
+real programs), but its extraction and shape are asserted here so a README
+edit cannot silently drop the runnable quickstart.
+"""
+
+import os
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO, "scripts"))
+
+import check_docs  # noqa: E402
+
+
+def test_readme_and_docs_exist():
+    assert os.path.isfile(os.path.join(REPO, "README.md"))
+    assert os.path.isfile(os.path.join(REPO, "docs", "compaction.md"))
+
+
+def test_docs_links_resolve():
+    errors = check_docs.check_links()
+    assert errors == [], "\n".join(errors)
+
+
+def test_module_link_checker_catches_rot():
+    assert check_docs._check_module_token("repro.core.api.Solver") is None
+    assert check_docs._check_module_token("repro.core.solve") is None
+    assert check_docs._check_module_token("repro.no_such_module.api") is not None
+
+
+def test_readme_quickstart_snippet_is_runnable_shape():
+    snippet = check_docs.extract_readme_snippet()
+    # The snippet must exercise the front door end to end.
+    for needle in ("Problem", "solve(", "solve_batch(", "best_density"):
+        assert needle in snippet, f"README quickstart lost {needle!r}"
+    compile(snippet, "README.md#quickstart", "exec")  # must parse

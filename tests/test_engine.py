@@ -382,6 +382,27 @@ def test_compact_below_none_is_classic_loop():
     assert int(a.passes) == int(b.passes)
 
 
+def test_compact_edges_prefix_sum_relabeling():
+    """The in-program compact step (engine.compact_edges): surviving slots
+    move to the front, original order preserved, everything else drops —
+    including survivors past a too-small capacity (the terminated-segment
+    overflow case, whose edges are never peeled again)."""
+    from repro.core.engine import compact_edges
+
+    ok = jnp.asarray([False, True, False, True, True, False, True])
+    src = jnp.arange(7, dtype=jnp.int32) * 10
+    w = jnp.arange(7, dtype=jnp.float32)
+    csrc, cw = jax.jit(lambda o, a, b: compact_edges(o, (a, b), 4))(ok, src, w)
+    np.testing.assert_array_equal(np.asarray(csrc), [10, 30, 40, 60])
+    np.testing.assert_array_equal(np.asarray(cw), [1.0, 3.0, 4.0, 6.0])
+    # Capacity 2: the first two survivors (in order) are kept, extras drop.
+    (csrc2,) = jax.jit(lambda o, a: compact_edges(o, (a,), 2))(ok, src)
+    np.testing.assert_array_equal(np.asarray(csrc2), [10, 30])
+    # Capacity beyond the survivor count zero-fills the tail.
+    (csrc8,) = jax.jit(lambda o, a: compact_edges(o, (a,), 8))(ok, src)
+    np.testing.assert_array_equal(np.asarray(csrc8), [10, 30, 40, 60, 0, 0, 0, 0])
+
+
 def _relabel_graph(edges, perm):
     """Applies a node permutation and keeps edge order (a stable relabel)."""
     p = jnp.asarray(perm, jnp.int32)

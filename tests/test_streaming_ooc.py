@@ -436,10 +436,28 @@ def test_problem_stream_knobs_lowering(tmp_path):
 
     with pytest.raises(ValueError, match="stream_prefetch"):
         Problem.undirected(stream_prefetch=0)
+    with pytest.raises(ValueError, match="residency_cap_edges"):
+        Problem.undirected(residency_cap_edges=0)
+    # residency_cap_edges lowers onto the driver: an impossible in-RAM cap
+    # with no spill_dir must surface the driver's error.
+    with pytest.raises(RuntimeError, match="residency_cap_edges"):
+        s.solve(
+            edges,
+            Problem.undirected(
+                eps=0.5, substrate="streaming", compaction="geometric",
+                stream_chunk=257, residency_cap_edges=1,
+            ),
+        )
     # spill_dir without the geometric ladder would be a silent no-op: both
-    # the front door and the driver reject it.
+    # the front door and the driver reject it.  (Since the 'auto' default
+    # flip, a default-compaction streaming Problem resolves to geometric —
+    # spill_dir is then valid; only an explicit 'off' still rejects.)
     with pytest.raises(ValueError, match="spill_dir"):
-        Problem.undirected(substrate="streaming", spill_dir="/x").resolve(100)
+        Problem.undirected(
+            substrate="streaming", compaction="off", spill_dir="/x"
+        ).resolve(100)
+    auto_spill = Problem.undirected(substrate="streaming", spill_dir="/x").resolve(100)
+    assert auto_spill.compaction == "geometric"
     with pytest.raises(ValueError, match="spill_dir"):
         StreamingDensest(lambda: iter(()), n_nodes=4, spill_dir="/x")
     # Streaming knobs never key compiled programs (no spurious recompiles).
