@@ -45,6 +45,7 @@ and stay bit-identical to their pre-redesign outputs.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
@@ -185,6 +186,18 @@ class Problem:
       host-side driver state: uniformly cache-key-exempt, and ignored on
       non-streaming substrates (the irrelevant-knob convention).
 
+    **Serving** (host-side, cache-key-exempt):
+
+    * ``cache_dir`` — backs the Solver's program cache with an on-disk tier
+      of serialized compiled executables, so a fresh process (a serving
+      replica, a restarted worker) skips the cold compile entirely
+      (``jax.experimental.serialize_executable`` under the hood; entries
+      are fingerprinted by backend + jax/jaxlib/repro versions and any
+      mismatch or corruption silently falls back to a recompile — see
+      core/progcache.py and docs/serving.md).  ``Solver(cache_dir=...)``
+      takes precedence; jit-substrate programs only (mesh executables embed
+      a device topology and stay in-memory).
+
     **Compaction runtime** (the scheduling knob; host/ladder state, so the
     whole group is cache-key-exempt — segment programs key on bucket
     shapes instead):
@@ -248,6 +261,11 @@ class Problem:
     stream_prefetch: int = 8
     spill_dir: Optional[str] = None
     residency_cap_edges: Optional[int] = None
+    # Persistent program cache (host-side knob, uniformly cache-key-exempt):
+    # directory for serialized compiled programs so a FRESH process skips the
+    # cold compile (see core/progcache.py and docs/serving.md).  A
+    # Solver(cache_dir=...) setting takes precedence over this field.
+    cache_dir: Optional[str] = None
 
     def __post_init__(self):
         if self.objective not in _OBJECTIVES:
@@ -693,6 +711,58 @@ def _fields_key(problem: Problem, exclude: Tuple[str, ...] = ()) -> Tuple:
     )
 
 
+class _DiskBackedProgram:
+    """A cached program with an on-disk tier: per concrete input signature,
+    either loads a serialized executable from ``cache_dir`` (no trace, no
+    lowering, no XLA compile) or AOT-compiles the wrapped jitted program and
+    publishes it.  The signature is part of the disk key because one Solver
+    key can legally serve several input shapes (e.g. the eps-sweep program
+    re-specializes per eps-vector length, exactly like ``jax.jit`` would)."""
+
+    def __init__(self, solver: "Solver", jit_fn: Callable, cache_dir: str, key: Tuple):
+        self._solver = solver
+        self._jit = jit_fn
+        self._dir = cache_dir
+        self._key = key
+        self._execs: Dict[Tuple, Callable] = {}
+
+    @staticmethod
+    def _sig(args) -> Tuple:
+        return tuple(
+            (tuple(leaf.shape), str(leaf.dtype))
+            for leaf in jax.tree_util.tree_leaves(args)
+        )
+
+    def _resolve(self, sig: Tuple, args) -> Callable:
+        from repro.core import progcache
+
+        disk_key = (self._key, sig)
+        path = progcache.entry_path(self._dir, disk_key)
+        loaded = progcache.load(path, disk_key)
+        if loaded is not None:
+            self._solver.disk_hits += 1
+            return loaded
+        self._solver.disk_misses += 1
+        compiled = self._jit.lower(*args).compile()
+        if not progcache.store(path, disk_key, compiled):
+            self._solver.disk_store_errors += 1
+        return compiled
+
+    def __call__(self, *args):
+        sig = self._sig(args)
+        fn = self._execs.get(sig)
+        if fn is None:
+            fn = self._resolve(sig, args)
+            self._execs[sig] = fn
+        return fn(*args)
+
+
+# Program kinds eligible for the disk tier: single-device jit programs.
+# Mesh executables (mesh/cseg_mesh/ladder_mesh) embed a device topology and
+# their keys hold live Mesh objects — they stay in-memory only.
+_DISK_KINDS = ("solve", "eps", "c", "graphs", "cseg")
+
+
 class Solver:
     """The stateful front door: memoizes jitted programs so same-shape
     requests never retrace.
@@ -702,27 +772,73 @@ class Solver:
     counts actual retraces (incremented inside the traced Python bodies) and
     ``cache_hits``/``cache_misses`` count program-cache lookups — the
     observability hooks the retrace tests and bench_api use.
+
+    ``cache_dir`` adds a PERSISTENT tier under the in-memory cache: compiled
+    programs are serialized to disk (``core/progcache.py``) so a fresh
+    process pays zero compiles for shapes any earlier process already
+    served — ``disk_hits``/``disk_misses`` count that tier's lookups.  A
+    ``Problem(cache_dir=...)`` enables the same per-request (the Solver
+    argument wins when both are set).
+
+    ``max_cached_programs`` bounds the in-memory cache with LRU eviction
+    (``cache_evictions`` counts) so a long-lived serving process holding
+    many shape buckets cannot grow without bound; the default (None) keeps
+    the historical unbounded behavior.  Evicted programs that have a disk
+    entry reload from it without recompiling.
     """
 
-    def __init__(self):
-        self._programs: Dict[Tuple, Callable] = {}
+    def __init__(
+        self,
+        cache_dir: Optional[str] = None,
+        max_cached_programs: Optional[int] = None,
+    ):
+        if max_cached_programs is not None and max_cached_programs < 1:
+            raise ValueError(
+                f"max_cached_programs={max_cached_programs} must be >= 1"
+            )
+        self._programs: Dict[Tuple, Callable] = collections.OrderedDict()
+        self.cache_dir = cache_dir
+        self.max_cached_programs = max_cached_programs
         self.cache_hits = 0
         self.cache_misses = 0
+        self.cache_evictions = 0
         self.trace_count = 0
+        self.disk_hits = 0
+        self.disk_misses = 0
+        self.disk_store_errors = 0
 
     # -- cache plumbing -----------------------------------------------------
     def _mark_trace(self) -> None:
         # Runs only while jax traces the program body: a retrace counter.
         self.trace_count += 1
 
-    def _get(self, key: Tuple, build: Callable[[], Callable]):
+    def _disk_dir(self, problem: Problem) -> Optional[str]:
+        """Effective persistent-cache directory: the Solver's own setting
+        wins; otherwise the Problem's (cache-key-exempt) knob."""
+        return self.cache_dir if self.cache_dir is not None else problem.cache_dir
+
+    def _get(
+        self,
+        key: Tuple,
+        build: Callable[[], Callable],
+        disk_dir: Optional[str] = None,
+    ):
         fn = self._programs.get(key)
         if fn is None:
             self.cache_misses += 1
             fn = build()
+            if disk_dir is not None and key[0] in _DISK_KINDS and key[6] is None:
+                # degree_fn hooks (key[6]) are keyed by object identity,
+                # which no other process can reproduce — memory tier only.
+                fn = _DiskBackedProgram(self, fn, disk_dir, key)
             self._programs[key] = fn
+            if self.max_cached_programs is not None:
+                while len(self._programs) > self.max_cached_programs:
+                    self._programs.popitem(last=False)  # LRU
+                    self.cache_evictions += 1
             return fn, False
         self.cache_hits += 1
+        self._programs.move_to_end(key)
         return fn, True
 
     def cache_size(self) -> int:
@@ -762,10 +878,12 @@ class Solver:
             exclude |= {"tile_size", "tile_block", "pallas_interpret"}
         if problem.substrate != "mesh":
             exclude |= {"edge_axes", "wire_dtype"}
-        # Programs are never built for the streaming substrate.
+        # Programs are never built for the streaming substrate; cache_dir is
+        # the host-side persistent-cache knob (it selects WHERE programs are
+        # stored, never what they compute).
         exclude |= {
             "stream_chunk", "stream_workers", "stream_prefetch", "spill_dir",
-            "residency_cap_edges",
+            "residency_cap_edges", "cache_dir",
         }
         return (
             kind,
@@ -1273,6 +1391,7 @@ class Solver:
             lambda: self._build_segment_program(
                 prob, seg_mp, compact_below, with_tiling
             ),
+            disk_dir=self._disk_dir(prob),
         )
 
     def _run_compacted(
@@ -1654,6 +1773,7 @@ class Solver:
         fn, hit = self._get(
             key,
             lambda: self._build_jit_program(prob, mp, "solve", degree_fn, with_tiling),
+            disk_dir=self._disk_dir(prob),
         )
         if prob.objective == "directed":
             if prob.c is None:
@@ -1841,6 +1961,7 @@ class Solver:
             fn, hit = self._get(
                 key,
                 lambda: self._build_jit_program(prob, mp, "graphs", degree_fn, False),
+                disk_dir=self._disk_dir(prob),
             )
             out = fn(batched)
             return self._wrap(out, prob, batched.n_nodes, mp, hit, batch="graphs")
@@ -1872,6 +1993,7 @@ class Solver:
             fn, hit = self._get(
                 key,
                 lambda: self._build_jit_program(prob, mp, "eps", degree_fn, with_tiling),
+                disk_dir=self._disk_dir(prob),
             )
             out = fn(graph, *aux, jnp.asarray(eps_host))
             return self._wrap(out, prob, n, mp, hit, batch="eps")
@@ -1886,7 +2008,9 @@ class Solver:
             graph.weight.dtype, degree_fn,
         )
         fn, hit = self._get(
-            key, lambda: self._build_jit_program(prob, mp, "c", degree_fn, False)
+            key,
+            lambda: self._build_jit_program(prob, mp, "c", degree_fn, False),
+            disk_dir=self._disk_dir(prob),
         )
         out = fn(graph, jnp.asarray(c_host))
         return self._wrap(out, prob, n, mp, hit, batch="c")

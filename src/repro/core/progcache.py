@@ -1,0 +1,122 @@
+"""Persistent (on-disk) compiled-program cache for the Solver.
+
+The Solver's in-memory program cache means a long-lived process never
+retraces a same-shape solve — but a FRESH process pays the full cold
+compile again (the ~90x overhead tracked in
+``experiments/bench/BENCH_api.json``).  This module gives that cache a disk
+tier, the pattern of JAX's own persistent compilation cache
+(``jax.experimental.compilation_cache``), specialized to the Solver's
+already-shape-keyed programs:
+
+  * an entry is one AOT-compiled executable, serialized with
+    ``jax.experimental.serialize_executable`` (the compiled XLA binary plus
+    its input/output pytree layout — loading it needs NO tracing, NO
+    lowering and NO XLA compilation);
+  * the file name is a SHA-256 over the Solver's program-cache key (problem
+    static fields, shapes, dtype) AND the environment :func:`fingerprint`
+    (backend + jax/jaxlib/repro versions + cache format), so entries from a
+    different environment can never be picked up by name;
+  * the fingerprint and key are ALSO stored inside the entry and re-checked
+    on load (belt and braces against hash collisions or copied cache dirs);
+  * writes go through :func:`repro.ioutil.atomic_write_file` (same-dir temp
+    + fsync + ``os.replace``), so a reader sees an old entry or a new one,
+    never a torn write;
+  * any load failure — corrupt pickle, stale fingerprint, a deserialization
+    error from a different device topology — silently falls back to a fresh
+    compile, which then overwrites the bad entry.
+
+A cache directory can be shared by every process of a serving fleet: the
+first process compiles and publishes, the rest start warm (see
+docs/serving.md for the invalidation contract).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+from typing import Any, Callable, Optional
+
+# Bump to invalidate every existing cache entry on a format change.
+FORMAT_VERSION = 1
+
+_ENTRY_SUFFIX = ".jaxprog"
+
+
+def fingerprint() -> dict:
+    """Environment fingerprint baked into every entry (name and payload).
+
+    Serialized executables are backend- and version-specific binaries; any
+    mismatch here must read as a cache miss, never a load attempt.
+    """
+    import jax
+    import jaxlib
+
+    import repro
+
+    return {
+        "format": FORMAT_VERSION,
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "repro": repro.__version__,
+    }
+
+
+def entry_path(cache_dir: str, key: Any) -> str:
+    """File path of the entry for ``key`` (a hashable, repr-stable Solver
+    program-cache key) under the current environment fingerprint."""
+    digest = hashlib.sha256(
+        (repr(key) + repr(sorted(fingerprint().items()))).encode()
+    ).hexdigest()
+    return os.path.join(cache_dir, digest + _ENTRY_SUFFIX)
+
+
+def store(path: str, key: Any, compiled) -> bool:
+    """Serializes an AOT-compiled executable (``jit(fn).lower(...).compile()``)
+    to ``path`` atomically.  Best-effort: returns False instead of raising —
+    a failed publish must never fail the solve that produced the program."""
+    try:
+        from jax.experimental import serialize_executable
+
+        from repro.ioutil import atomic_write_file
+
+        payload = serialize_executable.serialize(compiled)
+        blob = pickle.dumps(
+            {
+                "fingerprint": fingerprint(),
+                "key": repr(key),
+                "payload": payload,
+            }
+        )
+        atomic_write_file(path, lambda f: f.write(blob), suffix=_ENTRY_SUFFIX + ".tmp")
+        return True
+    except Exception:
+        return False
+
+
+def load(path: str, key: Any) -> Optional[Callable]:
+    """Loads the executable stored for ``key`` at ``path``, or None.
+
+    None covers every miss shape — absent file, torn/corrupt bytes, an
+    entry written by a different environment (fingerprint mismatch), a
+    SHA-collision entry for a different key, or a payload the current
+    runtime cannot deserialize.  The caller recompiles and overwrites.
+    """
+    try:
+        with open(path, "rb") as f:
+            entry = pickle.loads(f.read())
+        if entry.get("fingerprint") != fingerprint():
+            return None
+        if entry.get("key") != repr(key):
+            return None
+        from jax.experimental import serialize_executable
+
+        serialized, in_tree, out_tree = entry["payload"]
+        return serialize_executable.deserialize_and_load(
+            serialized, in_tree, out_tree
+        )
+    except FileNotFoundError:
+        return None
+    except Exception:
+        return None

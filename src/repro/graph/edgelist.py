@@ -246,18 +246,28 @@ def open_edge_spill(spill_dir: str):
     )
 
 
-def to_csr(edges: EdgeList) -> Tuple[np.ndarray, np.ndarray]:
-    """Host-side CSR (indptr, indices) over the symmetrized adjacency."""
-    src = np.asarray(edges.src)[np.asarray(edges.mask)]
-    dst = np.asarray(edges.dst)[np.asarray(edges.mask)]
+def to_csr(edges: EdgeList, return_weights: bool = False):
+    """Host-side CSR (indptr, indices[, weights]) over the symmetrized
+    adjacency.  ``return_weights`` adds the per-slot edge weight aligned
+    with ``indices`` (each undirected edge's weight appears under both
+    endpoints) — the serving engine's host-resident adjacency
+    (:class:`repro.serve.densest.DensestQueryEngine`) extracts weighted
+    ego-nets from it."""
+    mask = np.asarray(edges.mask)
+    src = np.asarray(edges.src)[mask]
+    dst = np.asarray(edges.dst)[mask]
+    w = np.asarray(edges.weight)[mask]
     if edges.directed:
-        s, d = src, dst
+        s, d, ww = src, dst, w
     else:
         s = np.concatenate([src, dst])
         d = np.concatenate([dst, src])
+        ww = np.concatenate([w, w])
     order = np.argsort(s, kind="stable")
-    s, d = s[order], d[order]
+    s, d, ww = s[order], d[order], ww[order]
     indptr = np.zeros(edges.n_nodes + 1, np.int64)
     np.add.at(indptr, s + 1, 1)
     indptr = np.cumsum(indptr)
+    if return_weights:
+        return indptr, d.astype(np.int32), ww
     return indptr, d.astype(np.int32)

@@ -1,0 +1,400 @@
+"""Seed-batched densest-subgraph query engine (the serving front line).
+
+Production traffic is per-seed queries — "give me the dense community
+around THIS node" — not whole-graph solves.  This engine makes a query's
+cost depend on the seed's NEIGHBORHOOD, not on n, and makes a fleet of
+concurrent queries share a handful of compiled programs:
+
+  * **Host-resident CSR adjacency**, built once from the edge list
+    (:func:`repro.graph.edgelist.to_csr`): O(1) neighbor lookups, no device
+    round-trip during extraction.
+  * **Bounded-radius ego-net extraction**: BFS out to ``radius`` hops
+    (optionally truncated at ``max_ego_nodes``), then the induced subgraph
+    is relabeled into a compact id space — O(vol(ego)) host work per query.
+  * **Power-of-two bucketing**: each extracted subgraph is padded into a
+    pow2 node bucket and pow2 edge bucket
+    (:func:`repro.graph.partition.pow2_bucket`, the compaction ladder's
+    bucket rule), and batches are padded to pow2 LANE counts — so every
+    query the fleet will ever see lands on O(log² size × log batch)
+    distinct program shapes.  Pad nodes are isolated: the peel removes them
+    in pass 1 (degree 0 is always ≤ the removal threshold), so the
+    (2+2eps) approximation guarantee holds on the padded buffer (see
+    docs/serving.md for the short proof sketch).
+  * **Micro-batching with a deadline**: queries queue (FIFO deque) until
+    ``max_batch`` are waiting or the oldest has waited ``max_wait_ms``;
+    a flush coalesces same-bucket queries and solves each bucket group as
+    ONE vmapped ``solve_batch`` program.  Each lane is bit-identical to a
+    standalone ``solve()`` of the same padded subgraph (the engine's
+    correctness contract, held by tests/test_serve_densest.py).
+  * **Persistent warmth**: give the engine (or its Solver) a ``cache_dir``
+    and a fresh replica loads every bucket program from disk instead of
+    compiling (``core/progcache.py``) — the cold-start path tracked by
+    ``benchmarks/bench_serve.py``.
+
+The Andersen-style local algorithm (``substrate='local'``, per-query cost
+provably independent of n without a radius knob) is the ROADMAP follow-up;
+this engine is the batching/caching half of the serving item.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.api import Problem, Solver
+from repro.graph.edgelist import EdgeList, to_csr
+from repro.graph.partition import pow2_bucket
+
+__all__ = ["DensestQueryEngine", "QueryResult"]
+
+# Bucket floors: below these the pad fraction is irrelevant and smaller
+# buckets would only mint more compiled programs.
+_NODE_FLOOR = 64
+_EDGE_FLOOR = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """One answered seed query.
+
+    ``nodes`` are ORIGINAL graph ids (bucket pad nodes are filtered out);
+    ``density`` is the peel's best density on the padded ego-net buffer —
+    a (2+2eps)-approximation of the ego-net's densest subgraph.
+    """
+
+    qid: int
+    seed: int
+    nodes: np.ndarray  # original-id members of the best set
+    density: float
+    seed_in_set: bool
+    n_ego: int  # extracted ego-net size (nodes)
+    m_ego: int  # extracted ego-net size (edges)
+    bucket: Tuple[int, int, int]  # (node bucket, edge bucket, batch lanes)
+    latency_s: float  # submit -> answer (engine clock)
+
+    @property
+    def size(self) -> int:
+        return int(len(self.nodes))
+
+
+@dataclasses.dataclass
+class _Pending:
+    qid: int
+    seed: int
+    radius: int
+    submitted_at: float
+
+
+class DensestQueryEngine:
+    """Answers per-seed densest-subgraph queries over one host graph.
+
+    Synchronous pump (the style of :class:`repro.serve.engine.ServeEngine`):
+    ``submit()`` enqueues, ``step()`` flushes a batch when one is due
+    (``max_batch`` reached or the oldest query older than ``max_wait_ms``),
+    ``flush()`` forces everything out, and ``query()`` / ``query_many()``
+    are the one-call conveniences.  ``time_fn`` is injectable so deadline
+    behavior is testable without sleeping.
+
+    Undirected host graphs only (the directed/local query model arrives
+    with ``substrate='local'``); the Problem must lower onto the jit
+    substrate and — for stacked lanes — a graph-independent backend.
+    """
+
+    def __init__(
+        self,
+        graph: EdgeList,
+        problem: Optional[Problem] = None,
+        *,
+        solver: Optional[Solver] = None,
+        cache_dir: Optional[str] = None,
+        radius: int = 2,
+        max_batch: int = 32,
+        max_wait_ms: float = 5.0,
+        max_ego_nodes: Optional[int] = None,
+        node_floor: int = _NODE_FLOOR,
+        edge_floor: int = _EDGE_FLOOR,
+        time_fn: Callable[[], float] = time.monotonic,
+    ):
+        if graph.directed:
+            raise ValueError(
+                "DensestQueryEngine serves undirected host graphs; the "
+                "directed per-seed model is the substrate='local' follow-up"
+            )
+        problem = problem if problem is not None else Problem.undirected()
+        if problem.substrate not in ("jit", "auto"):
+            raise ValueError(
+                "per-seed serving batches ego-nets on the jit substrate; "
+                f"substrate={problem.substrate!r} does not apply"
+            )
+        if problem.backend == "pallas":
+            raise ValueError(
+                "stacked-lane sweeps need a graph-independent backend "
+                "(tile bucketing is per-graph); use backend='exact'"
+            )
+        if problem.objective == "directed":
+            raise ValueError(
+                "ego-net extraction is undirected; directed objectives "
+                "need the substrate='local' follow-up"
+            )
+        if radius < 1:
+            raise ValueError(f"radius={radius} must be >= 1")
+        if max_batch < 1:
+            raise ValueError(f"max_batch={max_batch} must be >= 1")
+        if max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms={max_wait_ms} must be >= 0")
+        self.problem = problem
+        self.solver = solver if solver is not None else Solver(cache_dir=cache_dir)
+        self.radius = int(radius)
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self.max_ego_nodes = max_ego_nodes
+        self.node_floor = int(node_floor)
+        self.edge_floor = int(edge_floor)
+        self._time = time_fn
+        self.n_nodes = graph.n_nodes
+        # Host-resident weighted CSR, built once; every query reads it.
+        self._indptr, self._indices, self._csr_w = to_csr(
+            graph, return_weights=True
+        )
+        self._member = np.zeros(graph.n_nodes, bool)  # reusable scratch
+        self._local_id = np.zeros(graph.n_nodes, np.int32)  # relabel scratch
+        # FIFO admission queue (deque: O(1) popleft, arbitrarily deep).
+        self._queue: Deque[_Pending] = collections.deque()
+        self._next_qid = 0
+        # Observability: queries answered, batches flushed, lanes solved
+        # (incl. pad lanes), and the bucket -> lane-count histogram.
+        self.queries_answered = 0
+        self.batches_flushed = 0
+        self.lanes_solved = 0
+        self.pad_lanes = 0
+        self.bucket_histogram: Dict[Tuple[int, int], int] = {}
+
+    # -- extraction ---------------------------------------------------------
+    def _adjacency_rows(self, nodes: np.ndarray):
+        """Concatenated CSR rows of ``nodes``: returns ``(slot_idx,
+        row_src)`` where ``slot_idx`` indexes indices/weights and
+        ``row_src[i]`` is the node whose row slot ``i`` came from."""
+        starts = self._indptr[nodes]
+        counts = self._indptr[nodes + 1] - starts
+        total = int(counts.sum())
+        if total == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        # Vectorized multi-range gather: offset of each slot within the
+        # concatenation, shifted to its row's CSR start.
+        shift = np.repeat(
+            starts - np.concatenate(([0], np.cumsum(counts)[:-1])), counts
+        )
+        slot_idx = shift + np.arange(total)
+        return slot_idx, np.repeat(nodes.astype(np.int64), counts)
+
+    def _ego_nodes(self, seed: int, radius: int) -> np.ndarray:
+        """Sorted ids of the radius-hop ego-net around ``seed``; leaves
+        ``self._member`` SET for those ids (the caller resets it)."""
+        member = self._member
+        member[seed] = True
+        layers = [np.asarray([seed], np.int64)]
+        frontier = layers[0]
+        n_total = 1
+        for _ in range(radius):
+            slot_idx, _ = self._adjacency_rows(frontier)
+            nb = np.unique(self._indices[slot_idx].astype(np.int64))
+            nb = nb[~member[nb]]
+            if nb.size == 0:
+                break
+            if (
+                self.max_ego_nodes is not None
+                and n_total + nb.size > self.max_ego_nodes
+            ):
+                # Deterministic truncation: keep the lowest ids of the
+                # overflowing layer (documented extraction contract).
+                nb = nb[: max(self.max_ego_nodes - n_total, 0)]
+                if nb.size == 0:
+                    break
+            member[nb] = True
+            layers.append(nb)
+            frontier = nb
+            n_total += nb.size
+        return np.sort(np.concatenate(layers))
+
+    def extract(
+        self, seed: int, radius: Optional[int] = None
+    ) -> Tuple[EdgeList, np.ndarray]:
+        """The ego-net of ``seed`` as a bucket-padded EdgeList plus the
+        sorted original ids its compact ids map to (local id i ↔
+        ``nodes[i]``; ids >= ``len(nodes)`` are isolated pad nodes).
+
+        This is THE extraction the engine serves — the sequential baseline
+        and the bit-identity tests call it so both sides solve the same
+        padded buffer.
+        """
+        if not (0 <= seed < self.n_nodes):
+            raise ValueError(f"seed={seed} not in [0, {self.n_nodes})")
+        r = self.radius if radius is None else int(radius)
+        nodes = self._ego_nodes(seed, r)
+        slot_idx, row_src = self._adjacency_rows(nodes)
+        dsts = self._indices[slot_idx].astype(np.int64)
+        # Induced edges, each undirected pair once: the symmetrized CSR
+        # holds (u,v) and (v,u); src<dst keeps exactly one.
+        keep = self._member[dsts] & (row_src < dsts)
+        self._member[nodes] = False  # reset scratch before any return
+        self._local_id[nodes] = np.arange(len(nodes), dtype=np.int32)
+        src_l = self._local_id[row_src[keep]]
+        dst_l = self._local_id[dsts[keep]]
+        w = np.asarray(self._csr_w[slot_idx[keep]], np.float32)
+        m_ego = len(src_l)
+        n_b = pow2_bucket(len(nodes), self.node_floor)
+        m_b = pow2_bucket(max(m_ego, 1), self.edge_floor)
+        src_p = np.zeros(m_b, np.int32)
+        dst_p = np.zeros(m_b, np.int32)
+        w_p = np.zeros(m_b, np.float32)
+        msk = np.zeros(m_b, bool)
+        src_p[:m_ego] = src_l
+        dst_p[:m_ego] = dst_l
+        w_p[:m_ego] = w
+        msk[:m_ego] = True
+        # Buffers stay NUMPY: the device transfer happens at solve time —
+        # once per call for a sequential solve(), once per STACKED BATCH
+        # on the engine's coalesced path (the transfer is amortized across
+        # the whole bucket group; see _process).
+        padded = EdgeList(
+            src=src_p, dst=dst_p, weight=w_p, mask=msk, n_nodes=int(n_b)
+        )
+        return padded, nodes
+
+    # -- queueing -----------------------------------------------------------
+    def submit(self, seed: int, radius: Optional[int] = None) -> int:
+        """Enqueues a seed query; returns its qid.  Nothing runs until a
+        batch is due (``step``) or forced (``flush``)."""
+        if not (0 <= seed < self.n_nodes):
+            raise ValueError(f"seed={seed} not in [0, {self.n_nodes})")
+        qid = self._next_qid
+        self._next_qid += 1
+        self._queue.append(
+            _Pending(
+                qid=qid, seed=int(seed),
+                radius=self.radius if radius is None else int(radius),
+                submitted_at=self._time(),
+            )
+        )
+        return qid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def batch_due(self, now: Optional[float] = None) -> bool:
+        """The flush condition: a full batch is waiting, or the OLDEST
+        query has aged past the ``max_wait_ms`` deadline (the latency
+        bound a queued query is guaranteed under a live pump)."""
+        if not self._queue:
+            return False
+        if len(self._queue) >= self.max_batch:
+            return True
+        now = self._time() if now is None else now
+        return (now - self._queue[0].submitted_at) * 1000.0 >= self.max_wait_ms
+
+    def step(self, now: Optional[float] = None) -> List[QueryResult]:
+        """Flushes ONE batch if due (at most ``max_batch`` queries, FIFO);
+        returns its results, or [] when nothing is due yet."""
+        if not self.batch_due(now):
+            return []
+        take = min(self.max_batch, len(self._queue))
+        return self._process([self._queue.popleft() for _ in range(take)])
+
+    def flush(self) -> List[QueryResult]:
+        """Drains the whole queue now, deadline or not, in FIFO batches of
+        ``max_batch``."""
+        out: List[QueryResult] = []
+        while self._queue:
+            take = min(self.max_batch, len(self._queue))
+            out.extend(
+                self._process([self._queue.popleft() for _ in range(take)])
+            )
+        return out
+
+    def query(self, seed: int, radius: Optional[int] = None) -> QueryResult:
+        """One synchronous query (submit + flush)."""
+        qid = self.submit(seed, radius)
+        for res in self.flush():
+            if res.qid == qid:
+                return res
+        raise RuntimeError(f"query {qid} lost in flush")  # pragma: no cover
+
+    def query_many(
+        self, seeds: Sequence[int], radius: Optional[int] = None
+    ) -> List[QueryResult]:
+        """Answers many seeds through the batched path; results in seed
+        order."""
+        qids = [self.submit(s, radius) for s in seeds]
+        by_qid = {r.qid: r for r in self.flush()}
+        return [by_qid[q] for q in qids]
+
+    # -- the batched solve --------------------------------------------------
+    def _process(self, batch: List[_Pending]) -> List[QueryResult]:
+        """Extract + coalesce + solve one batch: same-bucket queries become
+        lanes of ONE vmapped solve_batch program per (node, edge) bucket."""
+        groups: Dict[Tuple[int, int], List[Tuple[_Pending, EdgeList, np.ndarray]]]
+        groups = {}
+        for q in batch:
+            padded, nodes = self.extract(q.seed, q.radius)
+            key = (padded.n_nodes, padded.n_edges_padded)
+            groups.setdefault(key, []).append((q, padded, nodes))
+        results: List[QueryResult] = []
+        for (n_b, m_b), items in groups.items():
+            lanes = pow2_bucket(len(items))
+            # One stacked (lanes, m_b) buffer per leaf, built HOST-side:
+            # the whole bucket group crosses to the device as a single
+            # transfer per leaf instead of one per lane.
+            src_s = np.zeros((lanes, m_b), np.int32)
+            dst_s = np.zeros((lanes, m_b), np.int32)
+            w_s = np.zeros((lanes, m_b), np.float32)
+            msk_s = np.zeros((lanes, m_b), bool)
+            for j, (_, g, _) in enumerate(items):
+                src_s[j] = g.src
+                dst_s[j] = g.dst
+                w_s[j] = g.weight
+                msk_s[j] = g.mask
+            stacked = EdgeList(
+                src=src_s, dst=dst_s, weight=w_s, mask=msk_s,
+                n_nodes=int(n_b),
+            )
+            res = self.solver.solve_batch(stacked, self.problem)
+            best_alive = np.asarray(res.best_alive)
+            best_rho = np.asarray(res.best_density)
+            done_at = self._time()
+            self.lanes_solved += lanes
+            self.pad_lanes += lanes - len(items)
+            self.bucket_histogram[(n_b, m_b)] = (
+                self.bucket_histogram.get((n_b, m_b), 0) + lanes
+            )
+            for j, (q, padded, nodes) in enumerate(items):
+                local = np.nonzero(best_alive[j])[0]
+                local = local[local < len(nodes)]  # drop isolated pad nodes
+                member_nodes = nodes[local]
+                results.append(
+                    QueryResult(
+                        qid=q.qid,
+                        seed=q.seed,
+                        nodes=member_nodes,
+                        density=float(best_rho[j]),
+                        seed_in_set=bool(
+                            np.searchsorted(member_nodes, q.seed)
+                            < len(member_nodes)
+                            and member_nodes[
+                                np.searchsorted(member_nodes, q.seed)
+                            ]
+                            == q.seed
+                        ),
+                        n_ego=int(len(nodes)),
+                        m_ego=int(np.asarray(padded.mask).sum()),
+                        bucket=(int(n_b), int(m_b), int(lanes)),
+                        latency_s=float(done_at - q.submitted_at),
+                    )
+                )
+        self.queries_answered += len(batch)
+        self.batches_flushed += 1
+        results.sort(key=lambda r: r.qid)
+        return results

@@ -16,8 +16,9 @@ Production structure (single-host scale model of the decode_32k cell):
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +63,9 @@ class ServeEngine:
         }
         self.cur_len = np.zeros(n_slots, np.int64)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.queue: List[Request] = []
+        # FIFO admission queue; deque so admission is O(1) per request
+        # (list.pop(0) is O(n) and the queue can be deep under load).
+        self.queue: Deque[Request] = collections.deque()
         self._decode = jax.jit(self._decode_impl)
 
     # --- public API ---
@@ -101,7 +104,7 @@ class ServeEngine:
     def _admit(self):
         for i in range(self.n_slots):
             if self.slot_req[i] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 self._prefill_into(i, req)
                 self.slot_req[i] = req
 

@@ -1,0 +1,240 @@
+"""Persistent program cache (core/progcache.py + Solver disk tier) and the
+bounded in-memory cache.
+
+The serving contract under test:
+
+  * a FRESH process with a warm ``cache_dir`` compiles ZERO programs — the
+    executable loads from disk (``trace_count == 0``, ``disk_hits`` > 0) and
+    the answer is bit-identical to the compiling process's;
+  * corrupted or version-stale entries silently fall back to a recompile
+    (and are overwritten with a good entry);
+  * ``cache_dir`` is cache-key-exempt: toggling it never mints a program;
+  * ``max_cached_programs`` bounds the in-memory cache with LRU eviction.
+"""
+
+import os
+import pickle
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import Problem, Solver
+from repro.core import progcache
+from repro.graph.generators import chung_lu_power_law
+
+N = 1500
+PROB = dict(eps=0.5, max_passes=12)
+
+
+def _graph(seed=0, n=N):
+    return chung_lu_power_law(n, exponent=2.0, avg_deg=6.0, seed=seed)
+
+
+def _prob(**kw):
+    base = dict(PROB)
+    base.update(kw)
+    return Problem.undirected(**base)
+
+
+# ---------------------------------------------------------------------------
+# disk round trip
+# ---------------------------------------------------------------------------
+
+
+def test_disk_cache_round_trip_same_process(tmp_path):
+    d = str(tmp_path / "cache")
+    edges = _graph()
+    s1 = Solver(cache_dir=d)
+    r1 = s1.solve(edges, _prob(compaction="off"))
+    assert s1.disk_misses == 1 and s1.disk_hits == 0
+    assert s1.trace_count == 1
+    assert len(os.listdir(d)) == 1
+
+    # A second Solver (fresh in-memory cache, same disk) never traces.
+    s2 = Solver(cache_dir=d)
+    r2 = s2.solve(edges, _prob(compaction="off"))
+    assert s2.trace_count == 0
+    assert s2.disk_hits == 1 and s2.disk_misses == 0
+    assert float(r1.best_density) == float(r2.best_density)
+    assert np.array_equal(np.asarray(r1.best_alive), np.asarray(r2.best_alive))
+
+
+def test_disk_cache_serves_the_compaction_ladder(tmp_path):
+    # Every cseg (ladder rung) program rides the disk tier too.
+    d = str(tmp_path / "cache")
+    edges = _graph()
+    s1 = Solver(cache_dir=d)
+    r1 = s1.solve(edges, _prob())  # compaction='auto' -> geometric
+    assert s1.disk_misses >= 2  # multiple rung programs
+    s2 = Solver(cache_dir=d)
+    r2 = s2.solve(edges, _prob())
+    assert s2.trace_count == 0 and s2.disk_misses == 0
+    assert s2.disk_hits == s1.disk_misses
+    assert float(r1.best_density) == float(r2.best_density)
+
+
+def test_disk_cache_round_trip_fresh_subprocess(tmp_path):
+    """The cold-start win itself: a brand-new PROCESS compiles nothing."""
+    d = str(tmp_path / "cache")
+    edges = _graph()
+    s1 = Solver(cache_dir=d)
+    r1 = s1.solve(edges, _prob(compaction="off"))
+    script = textwrap.dedent(
+        f"""
+        import numpy as np
+        from repro.core import Problem, Solver
+        from repro.graph.generators import chung_lu_power_law
+
+        edges = chung_lu_power_law({N}, exponent=2.0, avg_deg=6.0, seed=0)
+        s = Solver(cache_dir={d!r})
+        r = s.solve(edges, Problem.undirected(eps=0.5, max_passes=12,
+                                              compaction="off"))
+        assert s.trace_count == 0, f"fresh process traced: {{s.trace_count}}"
+        assert s.disk_hits == 1 and s.disk_misses == 0, (
+            s.disk_hits, s.disk_misses)
+        print("DENSITY", repr(float(r.best_density)))
+        print("PROGCACHE_SUBPROC_OK")
+        """
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PROGCACHE_SUBPROC_OK" in out.stdout
+    density = float(out.stdout.split("DENSITY", 1)[1].split()[0])
+    assert density == float(r1.best_density)
+
+
+# ---------------------------------------------------------------------------
+# fallback paths
+# ---------------------------------------------------------------------------
+
+
+def test_corrupted_entry_falls_back_and_heals(tmp_path):
+    d = str(tmp_path / "cache")
+    edges = _graph()
+    baseline = float(Solver(cache_dir=d).solve(edges, _prob(compaction="off")).best_density)
+    (entry,) = os.listdir(d)
+    with open(os.path.join(d, entry), "wb") as f:
+        f.write(b"\x00not a pickle")
+    s = Solver(cache_dir=d)
+    r = s.solve(edges, _prob(compaction="off"))
+    assert s.disk_hits == 0 and s.disk_misses == 1
+    assert s.trace_count == 1  # recompiled
+    assert float(r.best_density) == baseline
+    # ...and the recompile overwrote the bad entry with a good one.
+    s2 = Solver(cache_dir=d)
+    s2.solve(edges, _prob(compaction="off"))
+    assert s2.disk_hits == 1 and s2.trace_count == 0
+
+
+def test_stale_fingerprint_reads_as_miss(tmp_path):
+    d = str(tmp_path / "cache")
+    edges = _graph()
+    Solver(cache_dir=d).solve(edges, _prob(compaction="off"))
+    (entry,) = os.listdir(d)
+    path = os.path.join(d, entry)
+    with open(path, "rb") as f:
+        blob = pickle.loads(f.read())
+    blob["fingerprint"] = dict(blob["fingerprint"], jaxlib="0.0.0-other")
+    with open(path, "wb") as f:
+        f.write(pickle.dumps(blob))
+    s = Solver(cache_dir=d)
+    s.solve(edges, _prob(compaction="off"))
+    assert s.disk_hits == 0 and s.trace_count == 1
+
+
+def test_load_missing_and_key_mismatch(tmp_path):
+    assert progcache.load(str(tmp_path / "nope.jaxprog"), ("k",)) is None
+    # Same file, different key: the in-payload key check rejects it.
+    d = str(tmp_path / "cache")
+    edges = _graph()
+    Solver(cache_dir=d).solve(edges, _prob(compaction="off"))
+    (entry,) = os.listdir(d)
+    assert progcache.load(os.path.join(d, entry), ("other-key",)) is None
+
+
+def test_store_is_best_effort(tmp_path):
+    # An unserializable object must not raise out of store().
+    assert progcache.store(str(tmp_path / "x.jaxprog"), ("k",), object()) is False
+
+
+# ---------------------------------------------------------------------------
+# cache-key exemption + LRU bound
+# ---------------------------------------------------------------------------
+
+
+def test_cache_dir_is_cache_key_exempt(tmp_path):
+    edges = _graph()
+    s = Solver()
+    s.solve(edges, _prob(compaction="off"))
+    before = s.cache_size()
+    s.solve(edges, _prob(compaction="off", cache_dir=str(tmp_path)))
+    assert s.cache_size() == before  # no new program
+    assert s.cache_hits >= 1
+
+
+def test_solver_cache_dir_wins_over_problem(tmp_path):
+    d_solver = str(tmp_path / "solver")
+    d_prob = str(tmp_path / "problem")
+    edges = _graph()
+    s = Solver(cache_dir=d_solver)
+    s.solve(edges, _prob(compaction="off", cache_dir=d_prob))
+    assert os.path.isdir(d_solver) and len(os.listdir(d_solver)) == 1
+    assert not os.path.exists(d_prob)
+
+
+def test_lru_bound_evicts_and_counts(tmp_path):
+    g_small = _graph(n=600)
+    g_mid = _graph(n=900)
+    g_big = _graph(n=1200)
+    s = Solver(max_cached_programs=2)
+    s.solve(g_small, _prob(compaction="off"))
+    s.solve(g_mid, _prob(compaction="off"))
+    assert s.cache_size() == 2 and s.cache_evictions == 0
+    s.solve(g_big, _prob(compaction="off"))
+    assert s.cache_size() == 2 and s.cache_evictions == 1
+    # g_small's program was the LRU victim: solving it again is a miss...
+    misses = s.cache_misses
+    s.solve(g_small, _prob(compaction="off"))
+    assert s.cache_misses == misses + 1
+    # ...while g_big (recently used) is still resident.
+    hits = s.cache_hits
+    s.solve(g_big, _prob(compaction="off"))
+    assert s.cache_hits == hits + 1
+
+
+def test_lru_eviction_reloads_from_disk(tmp_path):
+    # Evicted programs with a disk entry come back without a recompile.
+    d = str(tmp_path / "cache")
+    g_small = _graph(n=600)
+    g_big = _graph(n=1200)
+    s = Solver(cache_dir=d, max_cached_programs=1)
+    s.solve(g_small, _prob(compaction="off"))
+    s.solve(g_big, _prob(compaction="off"))  # evicts g_small's program
+    assert s.cache_evictions == 1
+    traces = s.trace_count
+    s.solve(g_small, _prob(compaction="off"))
+    assert s.trace_count == traces  # reloaded from disk, not recompiled
+    assert s.disk_hits == 1
+
+
+def test_lru_default_is_unbounded():
+    s = Solver()
+    assert s.max_cached_programs is None
+    for n in (600, 900, 1200):
+        s.solve(_graph(n=n), _prob(compaction="off"))
+    assert s.cache_size() == 3 and s.cache_evictions == 0
+
+
+def test_max_cached_programs_validated():
+    with pytest.raises(ValueError):
+        Solver(max_cached_programs=0)

@@ -1,0 +1,317 @@
+"""Seed-batched densest-subgraph query engine (serve/densest.py).
+
+Contracts under test:
+
+  * **extraction correctness** — the engine's CSR ego-net (nodes AND
+    induced edges) matches an obvious set-based reference BFS over the raw
+    edge list, and peeling the extracted+relabeled subgraph equals peeling
+    the full graph restricted to that neighborhood;
+  * **bucket-coalescing bit-identity** — every batched answer equals a
+    standalone ``solve()`` of the same padded ego-net (density float-equal,
+    node set exactly equal);
+  * **micro-batching mechanics** — FIFO deque admission, ``max_batch``
+    flush, ``max_wait_ms`` deadline flush under an injected clock, pow2
+    lane padding;
+  * **knob validation** and edge cases (isolated seeds, whole-graph egos).
+"""
+
+import collections
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import Problem, Solver, solve
+from repro.graph.edgelist import EdgeList, from_numpy, to_csr
+from repro.graph.generators import chung_lu_power_law
+from repro.graph.partition import pow2_bucket
+from repro.serve.densest import DensestQueryEngine
+
+EPS = 0.5
+PROB = Problem.undirected(eps=EPS, compaction="off")
+
+
+def _graph(n=800, seed=0, avg_deg=6.0):
+    return chung_lu_power_law(n, exponent=2.0, avg_deg=avg_deg, seed=seed)
+
+
+def _engine(g, **kw):
+    kw.setdefault("max_wait_ms", 0.0)  # tests flush explicitly
+    return DensestQueryEngine(g, PROB, **kw)
+
+
+# ---------------------------------------------------------------------------
+# reference extraction (set-based, deliberately naive)
+# ---------------------------------------------------------------------------
+
+
+def _ref_ego(g: EdgeList, seed: int, radius: int):
+    """Reference BFS + induced-subgraph over the raw (host) edge list."""
+    mask = np.asarray(g.mask)
+    src = np.asarray(g.src)[mask]
+    dst = np.asarray(g.dst)[mask]
+    w = np.asarray(g.weight)[mask]
+    adj = collections.defaultdict(set)
+    for u, v in zip(src.tolist(), dst.tolist()):
+        adj[u].add(v)
+        adj[v].add(u)
+    members = {seed}
+    frontier = {seed}
+    for _ in range(radius):
+        nxt = set()
+        for u in frontier:
+            nxt |= adj[u]
+        frontier = nxt - members
+        members |= frontier
+        if not frontier:
+            break
+    nodes = np.asarray(sorted(members), np.int64)
+    keep = np.isin(src, nodes) & np.isin(dst, nodes)
+    # Each undirected edge once, canonical (min, max) order.
+    es = np.minimum(src[keep], dst[keep])
+    ed = np.maximum(src[keep], dst[keep])
+    return nodes, es, ed, w[keep]
+
+
+def test_ego_extraction_matches_reference_bfs():
+    g = _graph(n=600, seed=3)
+    eng = _engine(g, radius=2)
+    rng = np.random.default_rng(0)
+    for seed in rng.integers(0, 600, 12).tolist():
+        padded, nodes = eng.extract(seed)
+        ref_nodes, es, ed, ew = _ref_ego(g, seed, 2)
+        assert np.array_equal(nodes, ref_nodes)
+        # Engine edges, mapped back to original ids, canonical order.
+        msk = np.asarray(padded.mask)
+        gs = nodes[np.asarray(padded.src)[msk]]
+        gd = nodes[np.asarray(padded.dst)[msk]]
+        gw = np.asarray(padded.weight)[msk]
+        lo, hi = np.minimum(gs, gd), np.maximum(gs, gd)
+        key = lambda a, b: np.lexsort((b, a))
+        oe, og = key(lo, hi), key(es, ed)
+        assert np.array_equal(lo[oe], es[og])
+        assert np.array_equal(hi[oe], ed[og])
+        assert np.array_equal(gw[oe], ew[og])
+
+
+def test_extracted_peel_matches_full_graph_restriction():
+    """Peeling the relabeled extraction == peeling the full graph restricted
+    to the neighborhood (same reference subgraph built independently)."""
+    g = _graph(n=500, seed=7)
+    eng = _engine(g, radius=2)
+    # Seeds with at least one edge (a zero-edge reference would not pad
+    # out to the engine's edge-bucket floor).
+    degs = np.diff(to_csr(g)[0])
+    seeds = np.nonzero(degs > 0)[0][[0, 7, 42]].tolist()
+    for seed in seeds:
+        padded, nodes = eng.extract(seed)
+        ref_nodes, es, ed, ew = _ref_ego(g, seed, 2)
+        # Build the restriction ourselves, pad it into the SAME buckets.
+        relabel = {int(n): i for i, n in enumerate(ref_nodes)}
+        rs = np.asarray([relabel[int(u)] for u in es], np.int32)
+        rd = np.asarray([relabel[int(v)] for v in ed], np.int32)
+        ref = from_numpy(
+            rs, rd, pow2_bucket(len(ref_nodes), eng.node_floor), weight=ew
+        )
+        ref = ref.with_padding(padded.n_edges_padded)
+        a = solve(padded, PROB)
+        b = solve(ref, PROB)
+        assert float(a.best_density) == float(b.best_density)
+        # Same best set in ORIGINAL ids (edge order within the buffer may
+        # differ between the two constructions; the peel result may not).
+        sa = np.nonzero(np.asarray(a.best_alive))[0]
+        sb = np.nonzero(np.asarray(b.best_alive))[0]
+        assert np.array_equal(
+            nodes[sa[sa < len(nodes)]], ref_nodes[sb[sb < len(ref_nodes)]]
+        )
+
+
+# ---------------------------------------------------------------------------
+# bucket-coalescing bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_batched_answers_bit_identical_to_sequential_solve():
+    g = _graph(n=900, seed=1)
+    eng = _engine(g, radius=2, max_batch=8)
+    seeds = np.random.default_rng(2).integers(0, 900, 24).tolist()
+    results = eng.query_many(seeds)
+    assert [r.seed for r in results] == seeds
+    seq = Solver()
+    for r in results:
+        padded, nodes = eng.extract(r.seed)
+        ref = seq.solve(padded, PROB)
+        assert float(ref.best_density) == r.density
+        ba = np.nonzero(np.asarray(ref.best_alive))[0]
+        assert np.array_equal(nodes[ba[ba < len(nodes)]], r.nodes)
+        assert r.seed_in_set == bool(np.isin(r.seed, r.nodes))
+
+
+def test_coalesced_buckets_share_programs():
+    g = _graph(n=900, seed=1)
+    eng = _engine(g, radius=1, max_batch=8)
+    seeds = np.random.default_rng(5).integers(0, 900, 32).tolist()
+    eng.query_many(seeds)
+    trace_first = eng.solver.trace_count
+    eng.query_many(seeds)  # same shapes again: zero new programs
+    assert eng.solver.trace_count == trace_first
+    assert eng.lanes_solved >= len(seeds)
+    # Lane counts are pow2-padded so batch size never mints a program.
+    for (n_b, m_b), lanes in eng.bucket_histogram.items():
+        assert n_b == pow2_bucket(n_b) and m_b == pow2_bucket(m_b)
+
+
+# ---------------------------------------------------------------------------
+# micro-batching mechanics
+# ---------------------------------------------------------------------------
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_deadline_flush_under_injected_clock():
+    clk = _Clock()
+    g = _graph(n=300)
+    eng = DensestQueryEngine(
+        g, PROB, max_batch=8, max_wait_ms=10.0, time_fn=clk
+    )
+    eng.submit(3)
+    assert eng.step() == []  # not full, not old: nothing due
+    assert eng.pending() == 1
+    clk.t = 0.009
+    assert eng.step() == []  # 9ms < 10ms deadline
+    clk.t = 0.011
+    out = eng.step()  # oldest aged past the deadline -> flush
+    assert len(out) == 1 and out[0].seed == 3
+    assert out[0].latency_s == pytest.approx(0.011)
+    assert eng.pending() == 0
+
+
+def test_full_batch_flushes_without_deadline():
+    clk = _Clock()
+    g = _graph(n=300)
+    eng = DensestQueryEngine(
+        g, PROB, max_batch=4, max_wait_ms=1e9, time_fn=clk
+    )
+    for s in range(3):
+        eng.submit(s)
+    assert eng.step() == []  # 3 < max_batch and deadline far away
+    eng.submit(3)
+    out = eng.step()  # 4th arrival fills the batch
+    assert [r.seed for r in out] == [0, 1, 2, 3]  # FIFO order
+    assert eng.batches_flushed == 1
+
+
+def test_queue_is_a_deque_and_fifo():
+    g = _graph(n=300)
+    eng = _engine(g, max_batch=2)
+    assert isinstance(eng._queue, collections.deque)
+    qids = [eng.submit(s) for s in (5, 6, 7)]
+    out = eng.flush()  # two batches: [5, 6] then [7]
+    assert [r.qid for r in out] == qids
+    assert eng.batches_flushed == 2
+
+
+def test_lane_padding_is_pow2():
+    g = _graph(n=300)
+    eng = _engine(g, radius=1, max_batch=8)
+    eng.query_many([1, 2, 3])  # likely one bucket of 3 -> 4 lanes
+    assert eng.lanes_solved == sum(eng.bucket_histogram.values())
+    for (_, _), lanes in eng.bucket_histogram.items():
+        assert lanes == pow2_bucket(lanes)
+
+
+# ---------------------------------------------------------------------------
+# edge cases + validation
+# ---------------------------------------------------------------------------
+
+
+def test_isolated_seed():
+    # Node 4 has no edges: the ego-net is just the seed, density 0.
+    g = from_numpy(np.asarray([0, 1]), np.asarray([1, 2]), 5)
+    eng = _engine(g)
+    r = eng.query(4)
+    assert r.n_ego == 1 and r.m_ego == 0
+    assert r.density == 0.0
+    assert np.array_equal(r.nodes, [4])
+
+
+def test_radius_covers_whole_component():
+    g = from_numpy(np.asarray([0, 1, 2]), np.asarray([1, 2, 3]), 4)
+    eng = _engine(g, radius=3)
+    padded, nodes = eng.extract(0)
+    assert np.array_equal(nodes, [0, 1, 2, 3])
+    assert int(np.asarray(padded.mask).sum()) == 3
+
+
+def test_max_ego_nodes_truncates_deterministically():
+    g = _graph(n=600, seed=3)
+    eng = _engine(g, radius=2, max_ego_nodes=20)
+    # Pick a seed with a big 2-hop ball.
+    indptr, _ = to_csr(g)
+    seed = int(np.argmax(np.diff(indptr)))
+    _, nodes = eng.extract(seed)
+    assert len(nodes) <= 20
+    _, nodes2 = eng.extract(seed)
+    assert np.array_equal(nodes, nodes2)
+
+
+def test_scratch_membership_resets_between_queries():
+    g = _graph(n=400, seed=2)
+    eng = _engine(g, radius=2)
+    _, n1 = eng.extract(7)
+    assert not eng._member.any()
+    _, n2 = eng.extract(7)
+    assert np.array_equal(n1, n2)
+
+
+def test_validation():
+    g = _graph(n=300)
+    directed = EdgeList(
+        src=g.src, dst=g.dst, weight=g.weight, mask=g.mask,
+        n_nodes=g.n_nodes, directed=True,
+    )
+    with pytest.raises(ValueError, match="undirected"):
+        DensestQueryEngine(directed, PROB)
+    with pytest.raises(ValueError, match="substrate"):
+        DensestQueryEngine(g, Problem.undirected(substrate="streaming"))
+    with pytest.raises(ValueError, match="directed"):
+        DensestQueryEngine(g, Problem.directed())
+    with pytest.raises(ValueError, match="backend"):
+        DensestQueryEngine(g, Problem.undirected(backend="pallas"))
+    with pytest.raises(ValueError, match="radius"):
+        DensestQueryEngine(g, PROB, radius=0)
+    with pytest.raises(ValueError, match="max_batch"):
+        DensestQueryEngine(g, PROB, max_batch=0)
+    with pytest.raises(ValueError, match="seed"):
+        _engine(g).submit(300)
+    with pytest.raises(ValueError, match="seed"):
+        _engine(g).extract(-1)
+
+
+def test_works_with_at_least_k_objective():
+    g = _graph(n=400, seed=4)
+    prob = Problem.at_least_k(k=4, eps=EPS, compaction="off")
+    eng = DensestQueryEngine(g, prob, max_wait_ms=0.0)
+    r = eng.query(10)
+    padded, nodes = eng.extract(10)
+    ref = solve(padded, prob)
+    assert float(ref.best_density) == r.density
+
+
+def test_disk_cache_threads_through_engine(tmp_path):
+    g = _graph(n=400, seed=6)
+    d = str(tmp_path / "cache")
+    e1 = DensestQueryEngine(g, PROB, cache_dir=d, max_wait_ms=0.0)
+    r1 = e1.query(11)
+    assert e1.solver.disk_misses >= 1
+    e2 = DensestQueryEngine(g, PROB, cache_dir=d, max_wait_ms=0.0)
+    r2 = e2.query(11)
+    assert e2.solver.trace_count == 0 and e2.solver.disk_hits >= 1
+    assert r1.density == r2.density and np.array_equal(r1.nodes, r2.nodes)
