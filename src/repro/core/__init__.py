@@ -23,6 +23,7 @@ thin delegations through the same lowering and stay bit-identical:
   densest_subgraph_sketched        Algorithm 1 with Count-Sketch degrees
   densest_subgraph_distributed     MapReduce analogue on a device mesh
   StreamingDensest                 semi-streaming driver w/ checkpoint+stragglers
+  TurnstileDensest/TurnstileSketch ℓ0-sketch dynamic-stream runtime (±edges)
   densest_subgraph_exact           Goldberg max-flow exact oracle
   charikar_greedy                  node-at-a-time 2-approx baseline [10]
   run_peel / PeelOutcome           the engine itself (policies × backends)
@@ -90,6 +91,7 @@ from repro.core.streaming import (
     chunked_from_arrays,
     chunked_from_memmap,
 )
+from repro.core.turnstile import TurnstileDensest, TurnstileSketch
 
 # Deprecated result-type aliases (kept importable; warn on access).
 __getattr__ = deprecated_alias_getattr(
@@ -118,6 +120,8 @@ __all__ = [
     "SketchBackend",
     "Solver",
     "StreamingDensest",
+    "TurnstileDensest",
+    "TurnstileSketch",
     "UndirectedThreshold",
     "c_grid",
     "charikar_greedy",

@@ -86,6 +86,7 @@ _OBJECTIVES = ("undirected", "at_least_k", "directed")
 _BACKENDS = ("exact", "sketch", "pallas", "auto")
 _SUBSTRATES = ("jit", "mesh", "streaming", "auto")
 _COMPACTIONS = ("off", "twophase", "geometric", "auto")
+_STREAM_MODES = ("insert", "turnstile")
 
 # Above this node count, "auto" trades the O(n) exact degree vector for the
 # O(t*b) Count-Sketch (§5.1's memory regime).
@@ -186,6 +187,29 @@ class Problem:
       host-side driver state: uniformly cache-key-exempt, and ignored on
       non-streaming substrates (the irrelevant-knob convention).
 
+    **Turnstile runtime** (dynamic graph streams with DELETIONS — the MTVV
+    ℓ0-sampling runtime, core/turnstile.py; both fields are uniformly
+    cache-key-exempt: the driver is host-side and its sample peel
+    re-enters the program cache as an ordinary insert-mode solve):
+
+    * ``stream_mode`` — ``'insert'`` (default; every substrate's classic
+      append-only edge stream) or ``'turnstile'``: the graph is a dynamic
+      stream of ±edge update batches absorbed by an ℓ0-sampling sketch,
+      peeled on a uniform edge sample with density rescaled by the sample
+      rate ((1+eps)·(2+2eps) end-to-end).  ``solve()`` one-shots it
+      (insert the given edges, answer one query); continuous
+      update/query cycles hold a live :class:`repro.core.turnstile.
+      TurnstileDensest` (or the serve/ service).  Undirected, unweighted,
+      exact/pallas degree backends only — ``backend='sketch'`` is
+      rejected (it would sketch a sketch); mesh/streaming substrates are
+      rejected; compaction is ignored (nothing to amortize at sample
+      scale).
+    * ``sample_edges`` — the sample budget τ: queries recover the lowest
+      sketch level holding at most this many edges (level 0 ⇒ the exact
+      live graph).  Larger τ tightens the sampling (1+eps) factor at
+      O(τ·log n) sketch memory.  ``sketch_seed`` (below) also seeds the
+      ℓ0 hash family — same seed, bit-reproducible runs.
+
     **Serving** (host-side, cache-key-exempt):
 
     * ``cache_dir`` — backs the Solver's program cache with an on-disk tier
@@ -261,6 +285,11 @@ class Problem:
     stream_prefetch: int = 8
     spill_dir: Optional[str] = None
     residency_cap_edges: Optional[int] = None
+    # Turnstile runtime (±edge update streams, core/turnstile.py).  Host
+    # driver state, uniformly cache-key-exempt; ``sketch_seed`` above also
+    # seeds the ℓ0 hash family.
+    stream_mode: str = "insert"  # insert | turnstile
+    sample_edges: int = 1 << 14  # ℓ0 sample budget τ (per-query peel size)
     # Persistent program cache (host-side knob, uniformly cache-key-exempt):
     # directory for serialized compiled programs so a FRESH process skips the
     # cold compile (see core/progcache.py and docs/serving.md).  A
@@ -302,6 +331,12 @@ class Problem:
             raise ValueError(
                 f"residency_cap_edges={self.residency_cap_edges} must be >= 1"
             )
+        if self.stream_mode not in _STREAM_MODES:
+            raise ValueError(
+                f"stream_mode={self.stream_mode!r} not in {_STREAM_MODES}"
+            )
+        if self.sample_edges < 1:
+            raise ValueError(f"sample_edges={self.sample_edges} must be >= 1")
         if not isinstance(self.edge_axes, tuple):
             object.__setattr__(self, "edge_axes", tuple(self.edge_axes))
 
@@ -333,6 +368,34 @@ class Problem:
         """Resolves ``auto`` axes against the graph/host and validates that
         the requested matrix cell exists.  ``auto`` only picks the mesh
         substrate when the caller actually supplied a mesh (``have_mesh``)."""
+        if self.stream_mode == "turnstile":
+            # The turnstile runtime is its own cell: sketch updates on
+            # device, sampled peel on the jit substrate (core/turnstile.py).
+            if self.objective != "undirected":
+                raise ValueError(
+                    "stream_mode='turnstile' implements Algorithm 1 over "
+                    "the MTVV edge sample; use objective='undirected'"
+                )
+            if self.backend == "sketch":
+                raise ValueError(
+                    "backend='sketch' under stream_mode='turnstile' would "
+                    "sketch a sketch: the ℓ0 edge sample already bounds the "
+                    "peel's degree memory — use backend='exact' or 'pallas'"
+                )
+            if self.substrate in ("mesh", "streaming"):
+                raise ValueError(
+                    "stream_mode='turnstile' is its own runtime (device "
+                    "sketch + sampled peel on the jit substrate); use "
+                    "substrate='jit' or 'auto'"
+                )
+            # Compaction is an irrelevant knob at sample scale: quietly
+            # ignored, like stream_* off the streaming substrate.
+            return dataclasses.replace(
+                self,
+                backend="exact" if self.backend == "auto" else self.backend,
+                substrate="jit",
+                compaction="off",
+            )
         backend = self.backend
         substrate = self.substrate
         if substrate == "auto":
@@ -880,10 +943,13 @@ class Solver:
             exclude |= {"edge_axes", "wire_dtype"}
         # Programs are never built for the streaming substrate; cache_dir is
         # the host-side persistent-cache knob (it selects WHERE programs are
-        # stored, never what they compute).
+        # stored, never what they compute).  The turnstile fields are host
+        # driver state too: the sampled peel re-enters solve() as a plain
+        # insert-mode Problem, so its programs are shared with ordinary
+        # solves of the same shape.
         exclude |= {
             "stream_chunk", "stream_workers", "stream_prefetch", "spill_dir",
-            "residency_cap_edges", "cache_dir",
+            "residency_cap_edges", "cache_dir", "stream_mode", "sample_edges",
         }
         return (
             kind,
@@ -1739,6 +1805,13 @@ class Solver:
             raise ValueError(
                 "checkpoint_dir/resume only apply to substrate='streaming'"
             )
+        if prob.stream_mode == "turnstile":
+            if degree_fn is not None:
+                raise ValueError(
+                    "degree_fn hooks bind one fixed graph; the turnstile "
+                    "sample changes per query — use backend='exact'|'pallas'"
+                )
+            return self._solve_turnstile(graph, prob)
         if prob.substrate == "streaming":
             if degree_fn is not None:
                 raise ValueError(
@@ -1825,6 +1898,31 @@ class Solver:
         else:
             out = fn(sh.src, sh.dst, sh.weight, sh.mask)
         return self._wrap(out, prob, sh.n_nodes, mp, hit)
+
+    def _solve_turnstile(
+        self, graph: EdgeList, prob: Problem
+    ) -> DenseSubgraphResult:
+        """One-shot turnstile solve: builds a
+        :class:`~repro.core.turnstile.TurnstileDensest`, inserts every real
+        edge of ``graph`` as one ±edge batch, and answers one query — the
+        front-door lowering of ``Problem(stream_mode='turnstile')``.
+        Continuous update/query cycles hold their own live driver
+        (core/turnstile.py, or the serve/ density service)."""
+        from repro.core.turnstile import TurnstileDensest
+
+        if graph.directed:
+            raise ValueError("stream_mode='turnstile' needs an undirected graph")
+        mask = np.asarray(graph.mask)
+        if not np.all(np.asarray(graph.weight)[mask] == 1.0):
+            raise ValueError(
+                "stream_mode='turnstile' streams are unweighted edge SETS "
+                "(the ℓ0 sample has no weight field); got non-unit weights"
+            )
+        td = TurnstileDensest(graph.n_nodes, prob, solver=self)
+        src = np.asarray(graph.src)[mask]
+        dst = np.asarray(graph.dst)[mask]
+        td.apply(insert_edges=(src, dst))
+        return td.query()
 
     def _solve_streaming(
         self,
@@ -1930,6 +2028,12 @@ class Solver:
             # different rates, so there is no shared buffer to compact.
             # 'auto' quietly resolves to off; an explicit ladder is an error.
             p = problem.resolve(n_nodes)
+            if p.stream_mode == "turnstile":
+                raise ValueError(
+                    "solve_batch sweeps are single vmapped programs; the "
+                    "turnstile runtime is a host update/query driver — "
+                    "query a live TurnstileDensest per sweep point instead"
+                )
             if p.compaction != "off":
                 if problem.compaction == "auto":
                     p = dataclasses.replace(p, compaction="off")

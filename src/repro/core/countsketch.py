@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.api import DenseSubgraphResult, Problem, solve
 from repro.graph.edgelist import EdgeList
+from repro.kernels import hashing
 
 __all__ = [
     "SketchBackend",
@@ -62,24 +63,26 @@ def make_sketch_params(t: int, b: int, seed: int = 0) -> SketchParams:
 
 
 def _mix(a: jax.Array, c: jax.Array, x: jax.Array) -> jax.Array:
-    """uint32[t, ...] wrap-around multiply-shift mix of node ids."""
+    """uint32[t, ...] wrap-around multiply-shift mix of node ids.
+
+    Broadcasting wrapper over the shared :mod:`repro.kernels.hashing`
+    family (one per-table parameter row against the whole id array); the
+    mix itself lives there so the ℓ0 sampler and this sketch stay one
+    hash function.  Bit-identical to the historical inline spelling
+    (pinned by ``tests/test_turnstile.py::test_hashing_regression``).
+    """
     xu = x.astype(jnp.uint32)[None]
     a = a[(...,) + (None,) * x.ndim]
     c = c[(...,) + (None,) * x.ndim]
-    h = a * xu + c  # mod 2^32 by construction
-    # xorshift finalizer improves low-bit quality for the modulo below.
-    h = h ^ (h >> 16)
-    return h
+    return hashing.mix32(a, c, xu)
 
 
 def _hash_bucket(p: SketchParams, x: jax.Array) -> jax.Array:
-    h = _mix(p.a_h, p.c_h, x)
-    return (h % jnp.uint32(p.n_buckets)).astype(jnp.int32)
+    return hashing.bucket32(_mix(p.a_h, p.c_h, x), p.n_buckets)
 
 
 def _hash_sign(p: SketchParams, x: jax.Array) -> jax.Array:
-    h = _mix(p.a_g, p.c_g, x)
-    return jnp.where((h >> 31) == 0, 1.0, -1.0).astype(jnp.float32)
+    return hashing.sign32(_mix(p.a_g, p.c_g, x))
 
 
 def sketch_endpoint_counters(

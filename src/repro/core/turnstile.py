@@ -1,0 +1,563 @@
+"""Turnstile runtime: continuous densest-subgraph maintenance over dynamic
+graph streams (McGregor–Tench–Vorotnikova–Vu, arXiv 1506.04417).
+
+Every other substrate (jit / mesh / streaming) consumes an insert-only edge
+stream.  This module is the fourth runtime: the graph arrives as BATCHES of
+edge insertions AND deletions, absorbed by an update-linear ℓ0-sampling
+sketch (``kernels/l0_sampler/``), and "what is the densest subgraph right
+now?" is answered by recovering the sketch's uniform edge sample on the
+host and peeling ONLY the sample with the existing engine — density
+rescaled by the sample rate.  MTVV Theorem 6: peeling a uniform
+Θ(n·polylog/eps²)-edge sample yields a (1+eps)-factor-degraded estimate,
+so the end-to-end guarantee is (1+eps)·(2+2eps) against the true maximum
+density.
+
+Split of labor:
+
+* :class:`TurnstileSketch` — the device-resident sketch state and the ONE
+  jitted update program.  ``apply()`` pads each batch into power-of-two
+  buckets, so repeated same-magnitude batches reuse a single compilation
+  (``trace_count`` is the observability counter, same convention as
+  :class:`~repro.core.api.Solver`).  Sketches with equal params merge by
+  addition (:meth:`TurnstileSketch.merge`).
+* :class:`TurnstileDensest` — the query driver: recover → pad sample into
+  a pow2 edge bucket → ``Solver.solve`` (the sample peel hits the Solver's
+  program cache like any other same-shape solve) → rescale.  Query
+  metadata (sample level/rate, recovery failures, decode rounds) lands in
+  ``extras['turnstile']``.
+
+The front door reaches here via ``Problem(stream_mode='turnstile')``
+(``Solver._solve_turnstile`` builds a one-shot driver); serving holds a
+live driver via :class:`repro.serve.turnstile.TurnstileDensityService`.
+
+Semantics contract (see docs/turnstile.md): the stream must describe a
+SIMPLE undirected graph — deleting an edge that is not live, or inserting
+a live edge again, corrupts the sketch in a way 1-sparse recovery detects
+only probabilistically.  Use :func:`repro.graph.edgelist.apply_updates`
+as the exact host-side reference for well-formed churn streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import DenseSubgraphResult, Problem, Solver, default_solver
+from repro.graph.edgelist import EdgeList
+from repro.graph.partition import pow2_bucket
+from repro.kernels import hashing
+from repro.kernels.l0_sampler import L0Params, l0_update, make_l0_params
+
+__all__ = [
+    "TurnstileDensest",
+    "TurnstileSketch",
+]
+
+# Edge buckets the recovered sample is padded into before peeling: one
+# compiled peel program per pow2 bucket, shared across queries.
+_SAMPLE_EDGE_FLOOR = 256
+# Node bucket floor for the compacted sample peel (query() relabels the
+# sample onto its touched nodes when that shrinks the node space).
+_SAMPLE_NODE_FLOOR = 256
+# Update batches are padded to pow2 buckets above this floor: one compiled
+# update program serves every batch up to the floor, then one per doubling.
+_BATCH_FLOOR = 1024
+# Decode-round runaway guard (real decodes finish in O(log k) rounds).
+_MAX_DECODE_ROUNDS = 256
+
+
+# -- numpy mirrors of the kernels/hashing.py family -------------------------
+# The host decoder re-hashes recovery candidates; numpy uint32 arithmetic
+# wraps mod 2^32 exactly like the XLA ops, so these are bit-identical to
+# hashing.mix32_pair / bucket32 (the recover-vs-insert tests pin it).
+
+
+def _np_mix32_pair(a_x, a_y, c, x, y):
+    x = x.astype(np.uint32)
+    y = y.astype(np.uint32)
+    a_x = np.asarray(a_x, np.uint32)  # scalar or per-element multiplier
+    a_y = np.asarray(a_y, np.uint32)
+    c = np.asarray(c, np.uint32)
+    with np.errstate(over="ignore"):
+        h = a_x * x + a_y * y + c
+        h = h ^ (h >> np.uint32(16))
+        h = h * np.uint32(hashing.AVALANCHE)
+        h = h ^ (h >> np.uint32(15))
+    return h
+
+
+def _np_edge_cells(p: L0Params, u: np.ndarray, v: np.ndarray) -> np.ndarray:
+    a = np.asarray(p.a_cell)
+    c = np.asarray(p.c_cell)
+    return np.stack(
+        [
+            (_np_mix32_pair(a[j, 0], a[j, 1], c[j], u, v) % np.uint32(p.n_cells)).astype(
+                np.int32
+            )
+            for j in range(p.n_tables)
+        ]
+    )
+
+
+def _np_edge_fingerprint(p: L0Params, u: np.ndarray, v: np.ndarray) -> np.ndarray:
+    a = np.asarray(p.a_fp)
+    c = np.asarray(p.c_fp)
+    return _np_mix32_pair(a[0], a[1], c[0], u, v).view(np.int32)
+
+
+def _np_edge_level(p: L0Params, u: np.ndarray, v: np.ndarray) -> np.ndarray:
+    a = np.asarray(p.a_lvl)
+    c = np.asarray(p.c_lvl)
+    h = _np_mix32_pair(a[0], a[1], c[0], u, v)
+    # #{l in [1, L-1] : h < 2^(32-l)} == min(L-1, 32 - bit_length(h)): the
+    # closed form the decoder's hot loop needs (uint32 is exact in float64,
+    # so floor(log2) IS the high-bit position; h == 0 -> bit_length 0 ->
+    # clamped to L-1, matching "below every threshold").
+    bits = np.zeros(h.shape, np.int64)
+    nz = h > 0
+    bits[nz] = np.floor(np.log2(h[nz].astype(np.float64))).astype(np.int64) + 1
+    return np.minimum(p.n_levels - 1, 32 - bits).astype(np.int32)
+
+
+def _as_edge_arrays(
+    edges: Union[np.ndarray, Tuple, None]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Accepts an (k, 2) array or a (src, dst) pair; returns int32 arrays."""
+    if edges is None:
+        z = np.zeros(0, np.int32)
+        return z, z
+    if isinstance(edges, tuple) and len(edges) == 2:
+        src, dst = edges
+    else:
+        arr = np.asarray(edges)
+        if arr.ndim != 2 or arr.shape[1] != 2:
+            raise ValueError(
+                f"edge batch must be a (k, 2) array or a (src, dst) pair, "
+                f"got shape {arr.shape}"
+            )
+        src, dst = arr[:, 0], arr[:, 1]
+    return np.asarray(src, np.int32), np.asarray(dst, np.int32)
+
+
+class TurnstileSketch:
+    """Device-resident ℓ0-sampling sketch of a dynamic edge SET.
+
+    State is one int32 tensor ``[n_levels, n_tables, n_cells, 4]`` updated
+    by a single donated jitted program; :meth:`apply` absorbs a batch of
+    insertions and deletions, :meth:`recover` decodes the current uniform
+    edge sample on the host.  All updates are linear, so
+    ``sketch(A).merge(sketch(B)) == sketch(A ∪ B)`` bit for bit, updates
+    commute, and an insert followed by a delete restores the exact
+    all-zeros state.
+    """
+
+    def __init__(
+        self,
+        n_nodes: int,
+        sample_edges: int = 1 << 14,
+        *,
+        n_levels: int = 32,
+        n_tables: int = 3,
+        seed: int = 0,
+        use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+        batch_floor: int = _BATCH_FLOOR,
+    ):
+        if sample_edges < 1:
+            raise ValueError(f"sample_edges={sample_edges} must be >= 1")
+        if n_levels < 1:
+            raise ValueError(f"n_levels={n_levels} must be >= 1")
+        self.n_nodes = int(n_nodes)
+        self.sample_edges = int(sample_edges)
+        self.seed = int(seed)
+        # C = pow2(sample_edges) cells per table: the decoder only commits
+        # to a level holding <= sample_edges edges, so the d=3 tables run
+        # at load <= 1/3 — comfortably inside the IBLT peeling threshold.
+        n_cells = pow2_bucket(self.sample_edges, _SAMPLE_EDGE_FLOOR)
+        self.params: L0Params = make_l0_params(
+            n_levels=n_levels, n_cells=n_cells, n_tables=n_tables, seed=seed
+        )
+        self.tables = jnp.zeros(
+            (n_levels, n_tables, n_cells, 4), jnp.int32
+        )
+        # None -> the kernels' dispatch rule: Pallas when compiled on TPU,
+        # the segment-sum reference elsewhere (it IS the right CPU program).
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        self._use_pallas = bool(use_pallas)
+        self._interpret = interpret
+        self.batch_floor = int(batch_floor)
+        # Observability: trace_count increments inside the traced body, so
+        # repeated same-shape batches prove single-compilation (the Solver
+        # convention); the rest are host counters.
+        self.trace_count = 0
+        self.batches_applied = 0
+        self.updates_applied = 0
+        self.recovery_failures = 0
+        sketch = self
+
+        def _update(tables, u, v, s):
+            sketch.trace_count += 1
+            return l0_update(
+                tables,
+                u,
+                v,
+                s,
+                sketch.params,
+                use_pallas=sketch._use_pallas,
+                interpret=sketch._interpret,
+            )
+
+        self._update = jax.jit(_update, donate_argnums=0)
+        # Query-path device reductions (jitted once; `level` is static and
+        # only a handful of level values ever occur).
+        self._counts_fn = jax.jit(lambda t: jnp.sum(t[:, 0, :, 0], axis=1))
+        self._agg_fn = jax.jit(
+            lambda t, level: jnp.sum(t[level:], axis=0, dtype=jnp.int32),
+            static_argnums=1,
+        )
+
+    # -- updates ------------------------------------------------------------
+    def apply(
+        self,
+        insert_edges: Union[np.ndarray, Tuple, None] = None,
+        delete_edges: Union[np.ndarray, Tuple, None] = None,
+    ) -> "TurnstileSketch":
+        """Absorbs one batched turnstile update (±edges) into the sketch.
+
+        Batches are padded to power-of-two buckets (floor
+        ``batch_floor``), so all batches up to the floor — and every
+        doubling above it — share ONE cached jitted program.  A single
+        batch must not contain the same edge on both sides: deletions are
+        not ordered against insertions inside a batch (linearity makes
+        the sum well-defined, but insert+delete of the SAME edge in one
+        batch only makes sense if it was live before or is inserted
+        first — split such updates across batches).
+        """
+        ins_u, ins_v = _as_edge_arrays(insert_edges)
+        del_u, del_v = _as_edge_arrays(delete_edges)
+        k = len(ins_u) + len(del_u)
+        if k == 0:
+            return self
+        u = np.concatenate([ins_u, del_u])
+        v = np.concatenate([ins_v, del_v])
+        s = np.concatenate(
+            [np.ones(len(ins_u), np.int32), -np.ones(len(del_u), np.int32)]
+        )
+        pad = pow2_bucket(k, self.batch_floor) - k
+        if pad:
+            u = np.pad(u, (0, pad))
+            v = np.pad(v, (0, pad))
+            s = np.pad(s, (0, pad))  # sgn 0: padding rows vanish
+        self.tables = self._update(
+            self.tables, jnp.asarray(u), jnp.asarray(v), jnp.asarray(s)
+        )
+        self.batches_applied += 1
+        self.updates_applied += k
+        return self
+
+    def merge(self, other: "TurnstileSketch") -> "TurnstileSketch":
+        """Folds another sketch of the SAME geometry and seed into this one
+        (sketch(A) + sketch(B) == sketch(A ∪ B) for disjoint A, B; more
+        generally the sketch of the summed update streams)."""
+        if not isinstance(other, TurnstileSketch):
+            raise TypeError(f"cannot merge {type(other).__name__}")
+        if (
+            self.tables.shape != other.tables.shape
+            or self.seed != other.seed
+            or self.n_nodes != other.n_nodes
+        ):
+            raise ValueError(
+                "mergeable sketches need identical geometry "
+                f"(shape, seed, n_nodes): {self.tables.shape}/{self.seed} vs "
+                f"{other.tables.shape}/{other.seed}"
+            )
+        self.tables = self.tables + other.tables
+        self.batches_applied += other.batches_applied
+        self.updates_applied += other.updates_applied
+        return self
+
+    # -- recovery -----------------------------------------------------------
+    def level_counts(self) -> np.ndarray:
+        """int64[L] EXACT number of live edges per level (the count field
+        is linear, so collisions don't distort totals)."""
+        # Any one table's count column sums to the per-level edge count;
+        # reduced on device so the host never touches the full tensor.
+        # int32 on device (x64 may be off), widened on the host — per-level
+        # counts are bounded by the live edge count, far below 2^31.
+        return np.asarray(self._counts_fn(self.tables)).astype(np.int64)
+
+    def recover(
+        self, target: Optional[int] = None
+    ) -> Tuple[np.ndarray, int, Dict[str, Any]]:
+        """Decodes the current uniform edge sample.
+
+        Picks the smallest level ``l*`` whose suffix (levels >= l*) holds
+        at most ``target`` edges — an EXACT count, read from the linear
+        count fields — then peels 1-sparse cells of the suffix-summed
+        tables.  ``l* == 0`` means the whole live edge set fit the budget:
+        the "sample" is exact.  A level that fails to fully decode
+        (collisions the d-table peeling cannot break, or a corrupted
+        stream) increments ``recovery_failures`` and the next level is
+        tried; exhausting all levels raises.
+
+        Returns ``(edges int32[k, 2] sorted by (u, v), level, info)``.
+        """
+        tau = self.sample_edges if target is None else int(target)
+        L = self.tables.shape[0]
+        counts = self.level_counts()
+        suffix = counts[::-1].cumsum()[::-1]
+        l_star = int(np.argmax(suffix <= tau)) if (suffix <= tau).any() else L
+        failures0 = self.recovery_failures
+        for level in range(l_star, L):
+            # Suffix-sum of the per-level tables == the sketch of the
+            # Bernoulli(2^-level) sample (linearity); wraparound int32.
+            # Reduced on device: only the [d, C, 4] aggregate crosses to
+            # the host, not the full [L, d, C, 4] tensor.
+            agg = np.asarray(self._agg_fn(self.tables, level))
+            decoded = self._decode(agg, level)
+            if decoded is not None:
+                edges, rounds = decoded
+                info = {
+                    "level": level,
+                    "first_level_tried": l_star,
+                    "sample_rate": 2.0 ** (-level),
+                    "sample_edges_recovered": int(len(edges)),
+                    "recovery_failures": self.recovery_failures - failures0,
+                    "decode_rounds": rounds,
+                    "exact": level == 0,
+                    "level_suffix_count": int(suffix[level]),
+                }
+                return edges, level, info
+            self.recovery_failures += 1
+        raise RuntimeError(
+            f"l0 recovery failed at every level >= {l_star} "
+            f"(suffix counts {suffix[min(l_star, L - 1):].tolist()}; "
+            "was the same live edge inserted twice, or a non-live edge "
+            "deleted?)"
+        )
+
+    def _decode(
+        self, agg: np.ndarray, level: int
+    ) -> Optional[Tuple[np.ndarray, int]]:
+        """IBLT peeling of one aggregated [d, C, 4] table set.  Returns
+        ``(edges sorted by (u, v), rounds)`` on full decode (all cells
+        return to zero), else None."""
+        p = self.params
+        d, C = p.n_tables, p.n_cells
+        work = agg.copy()
+        n = self.n_nodes
+        seen_keys = np.zeros(0, np.int64)
+        out_u: list = []
+        out_v: list = []
+        rounds = 0
+        a_cell = np.asarray(p.a_cell)
+        c_cell = np.asarray(p.c_cell)
+        # Round 1 scans every cell; later rounds only re-examine cells the
+        # previous round's subtractions TOUCHED — unreachable collision
+        # debris has unchanging content, so re-validating it every round
+        # buys nothing (this is queue-based IBLT peeling, vectorized).
+        cand = np.nonzero(work[:, :, 0] == 1)  # (table, cell) singletons
+        for rounds in range(1, _MAX_DECODE_ROUNDS + 1):
+            if len(cand[0]) == 0:
+                break
+            got = work[cand[0], cand[1]]  # one gather: [k, 4]
+            u, v, fp = got[:, 1], got[:, 2], got[:, 3]
+            ok = (u >= 0) & (v > u) & (v < n)
+            uu = np.where(ok, u, 0).astype(np.int32)
+            vv = np.where(ok, v, 1).astype(np.int32)
+            # A true singleton re-hashes consistently: fingerprint, its own
+            # cell in the table it was found in (one gathered pair-hash,
+            # not all d), and a level >= the suffix floor.  Anything else
+            # is a collision artifact this round cannot peel yet.
+            ok &= _np_edge_fingerprint(p, uu, vv) == fp
+            own = _np_mix32_pair(
+                a_cell[cand[0], 0], a_cell[cand[0], 1], c_cell[cand[0]], uu, vv
+            )
+            ok &= (own % np.uint32(C)).astype(np.int64) == cand[1]
+            ok &= _np_edge_level(p, uu, vv) >= level
+            if not ok.any():
+                break
+            # Dedup (the same edge peels as a singleton in several tables).
+            key = u[ok].astype(np.int64) * n + v[ok]
+            _, first = np.unique(key, return_index=True)
+            eu = u[ok][first].astype(np.int32)
+            ev = v[ok][first].astype(np.int32)
+            fresh = (
+                ~np.isin(key[first], seen_keys)
+                if seen_keys.size
+                else np.ones(len(first), bool)
+            )
+            if not fresh.any():
+                break
+            eu, ev = eu[fresh], ev[fresh]
+            seen_keys = np.concatenate([seen_keys, key[first][fresh]])
+            # Subtract the recovered edges from ALL their cells (wraparound
+            # int32), exposing new singletons for the next round.  The
+            # scatter is a per-field bincount: sums stay < 2^45, exact in
+            # float64, then re-wrapped mod 2^32 (ufunc.at is ~100x slower
+            # at sample-sized rounds).
+            ecells = _np_edge_cells(p, eu, ev)  # [d, k]
+            efp = _np_edge_fingerprint(p, eu, ev)
+            vals = np.stack(
+                [np.ones(len(eu), np.int32), eu, ev, efp], axis=-1
+            ).astype(np.float64).reshape(-1)  # [k*4] field-interleaved
+            for j in range(d):
+                flat_idx = (ecells[j][:, None] * 4 + np.arange(4)).reshape(-1)
+                acc = np.bincount(
+                    flat_idx, weights=vals, minlength=C * 4
+                ).astype(np.int64).reshape(C, 4)
+                diff = work[j].astype(np.int64) - acc
+                work[j] = (
+                    (diff & np.int64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+                )
+            out_u.append(eu)
+            out_v.append(ev)
+            flat = np.unique(
+                np.repeat(np.arange(d), ecells.shape[1]) * C + ecells.reshape(-1)
+            )
+            tj, cj = flat // C, flat % C
+            hit = work[tj, cj, 0] == 1
+            cand = (tj[hit], cj[hit])
+        if not np.all(work == 0):
+            return None
+        if out_u:
+            eu = np.concatenate(out_u)
+            ev = np.concatenate(out_v)
+        else:
+            eu = np.zeros(0, np.int32)
+            ev = np.zeros(0, np.int32)
+        order = np.lexsort((ev, eu))
+        return np.stack([eu[order], ev[order]], axis=1), rounds
+
+
+class TurnstileDensest:
+    """Continuous densest-subgraph maintenance: a :class:`TurnstileSketch`
+    feeding the EXISTING peel engine through the Solver's program cache.
+
+    ``problem`` must be (or resolve to) ``stream_mode='turnstile'``; its
+    ``sample_edges`` / ``sketch_seed`` configure the sketch and its
+    objective knobs (eps, max_passes, track_history, exact-vs-pallas
+    degree backend) configure the per-query sample peel.  ``query()``
+    returns a standard :class:`~repro.core.api.DenseSubgraphResult` whose
+    density estimates are rescaled by the inverse sample rate and whose
+    ``extras['turnstile']`` carries the recovery telemetry.
+    """
+
+    def __init__(
+        self,
+        n_nodes: int,
+        problem: Optional[Problem] = None,
+        *,
+        solver: Optional[Solver] = None,
+        n_levels: int = 32,
+        n_tables: int = 3,
+        use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+        batch_floor: int = _BATCH_FLOOR,
+    ):
+        if problem is None:
+            problem = Problem.undirected(stream_mode="turnstile")
+        prob = problem.resolve(n_nodes)
+        if prob.stream_mode != "turnstile":
+            raise ValueError(
+                f"TurnstileDensest needs Problem(stream_mode='turnstile'), "
+                f"got stream_mode={problem.stream_mode!r}"
+            )
+        self.n_nodes = int(n_nodes)
+        self.problem = prob
+        self.solver = solver if solver is not None else default_solver
+        self.sketch = TurnstileSketch(
+            n_nodes,
+            prob.sample_edges,
+            n_levels=n_levels,
+            n_tables=n_tables,
+            seed=prob.sketch_seed,
+            use_pallas=use_pallas,
+            interpret=interpret,
+            batch_floor=batch_floor,
+        )
+
+    def apply(self, insert_edges=None, delete_edges=None) -> "TurnstileDensest":
+        """Absorbs one ±edge batch (see :meth:`TurnstileSketch.apply`)."""
+        self.sketch.apply(insert_edges, delete_edges)
+        return self
+
+    def query(self) -> DenseSubgraphResult:
+        """Current (1+eps)·(2+2eps)-approximate densest subgraph.
+
+        Recovers the sample, pads it into a pow2 edge bucket (one peel
+        compilation per bucket, shared across queries) and runs the
+        standard undirected peel; ``best_density`` / ``history_m`` /
+        ``history_rho`` come back multiplied by ``2^level`` (the inverse
+        sample rate).  ``level == 0`` means the estimate is EXACT (the
+        whole live graph fit the sample budget).
+
+        When the sample touches far fewer nodes than the graph has (the
+        normal case at scale: at most ``2*sample_edges`` of them), the
+        peel runs in a COMPACTED node space — per-pass cost O(tau), not
+        O(n).  ``extras['turnstile']['sample_nodes']`` then maps compact
+        ids back to original ids (``res.best_alive[i]`` describes original
+        node ``sample_nodes[i]``); without the key, ids are original.
+        """
+        edges, level, info = self.sketch.recover()
+        k = len(edges)
+        e_src = edges[:, 0] if k else np.zeros(0, np.int32)
+        e_dst = edges[:, 1] if k else np.zeros(0, np.int32)
+        nodes = np.unique(edges) if k else np.zeros(0, np.int32)
+        n_peel = pow2_bucket(max(len(nodes), 1), _SAMPLE_NODE_FLOOR)
+        compacted = n_peel < self.n_nodes
+        if compacted:
+            e_src = np.searchsorted(nodes, e_src).astype(np.int32)
+            e_dst = np.searchsorted(nodes, e_dst).astype(np.int32)
+        else:
+            n_peel = self.n_nodes
+        m_pad = pow2_bucket(max(k, 1), _SAMPLE_EDGE_FLOOR)
+        src = np.zeros(m_pad, np.int32)
+        dst = np.zeros(m_pad, np.int32)
+        msk = np.zeros(m_pad, bool)
+        src[:k] = e_src
+        dst[:k] = e_dst
+        msk[:k] = True
+        sample = EdgeList(
+            src=jnp.asarray(src),
+            dst=jnp.asarray(dst),
+            weight=jnp.asarray(msk.astype(np.float32)),
+            mask=jnp.asarray(msk),
+            n_nodes=n_peel,
+            directed=False,
+        )
+        # The sample peel is an ordinary insert-mode solve: small pow2
+        # buffer, ladder off (nothing to amortize at sample scale).  Its
+        # program cache key is shared with any other same-shape solve —
+        # stream_mode/sample_edges are uniformly cache-key-exempt.
+        inner = dataclasses.replace(
+            self.problem, stream_mode="insert", compaction="off", substrate="jit"
+        )
+        res = self.solver.solve(sample, inner)
+        scale = float(2**level)
+        info = dict(info)
+        info["updates_applied"] = self.sketch.updates_applied
+        info["batches_applied"] = self.sketch.batches_applied
+        info["sample_padded_edges"] = int(m_pad)
+        info["sample_n_nodes"] = int(n_peel)
+        if compacted:
+            info["sample_nodes"] = nodes
+        extras = dict(res.extras or {})
+        extras["turnstile"] = info
+        prov = res.provenance
+        if prov is not None:
+            prov = dataclasses.replace(prov, substrate="turnstile")
+        hist_scale = jnp.float32(scale)
+        return dataclasses.replace(
+            res,
+            best_density=res.best_density * hist_scale,
+            history_m=res.history_m * hist_scale,
+            history_rho=res.history_rho * hist_scale,
+            extras=extras,
+            provenance=prov,
+        )

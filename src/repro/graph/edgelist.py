@@ -92,6 +92,90 @@ def from_numpy(
     )
 
 
+def apply_updates(
+    edges: EdgeList,
+    inserts: np.ndarray | None = None,
+    deletes: np.ndarray | None = None,
+) -> Tuple[EdgeList, dict]:
+    """Host-side exact reference for one turnstile update batch.
+
+    Applies ``deletes`` then ``inserts`` to the undirected edge SET of
+    ``edges`` and returns ``(new_edges, stats)``.  This is the ground
+    truth the turnstile sketch tests/examples compare against: surviving
+    edges keep their original stream order (stable), inserted edges are
+    appended in batch order with weight 1.0, and the result is unpadded.
+
+    Semantics (the well-formed-stream contract of core/turnstile.py):
+
+    * edges are undirected — endpoint order is ignored for matching;
+    * deleting an edge that is not live is a NO-OP, counted in
+      ``stats['missing_deletes']`` (the sketch has no such tolerance:
+      a missing delete corrupts it);
+    * inserting an edge that is already live is a NO-OP, counted in
+      ``stats['dup_inserts']`` (set semantics — the sketch would become
+      a multiset and fail recovery);
+    * duplicate entries WITHIN one batch collapse to one (first wins),
+      counted in the same stats;
+    * a batch must not contain the same edge in both lists — deletes are
+      applied first, so insert+delete of one edge in one batch is
+      order-ambiguous and raises.
+
+    ``inserts``/``deletes`` are (k, 2) int arrays (or None).
+    """
+    ins = np.asarray(inserts if inserts is not None else np.zeros((0, 2)), np.int64)
+    del_ = np.asarray(deletes if deletes is not None else np.zeros((0, 2)), np.int64)
+    if ins.ndim != 2 or ins.shape[1] != 2 or del_.ndim != 2 or del_.shape[1] != 2:
+        raise ValueError("inserts/deletes must be (k, 2) edge arrays")
+    if edges.directed:
+        raise ValueError("apply_updates models undirected turnstile streams")
+    mask = np.asarray(edges.mask)
+    src = np.asarray(edges.src, np.int64)[mask]
+    dst = np.asarray(edges.dst, np.int64)[mask]
+    w = np.asarray(edges.weight)[mask]
+    n = int(edges.n_nodes)
+
+    def keys(a, b):
+        return np.minimum(a, b) * n + np.maximum(a, b)
+
+    live = keys(src, dst)
+    dk_all = keys(del_[:, 0], del_[:, 1])
+    ik_all = keys(ins[:, 0], ins[:, 1])
+    dk, d_first = np.unique(dk_all, return_index=True)
+    ik, i_first = np.unique(ik_all, return_index=True)
+    both = np.intersect1d(dk, ik)
+    if len(both):
+        raise ValueError(
+            "a batch must not insert and delete the same edge (deletes "
+            f"apply first, making the order ambiguous): {len(both)} overlap"
+        )
+    stats = {
+        "dup_inserts": int(len(ik_all) - len(ik)),
+        "missing_deletes": int(len(dk_all) - len(dk)),
+    }
+    # Deletes first: drop live edges whose key is in dk (stable order).
+    hit = np.isin(live, dk)
+    stats["deleted"] = int(hit.sum())
+    stats["missing_deletes"] += int(len(dk) - hit.sum())
+    src, dst, w, live = src[~hit], dst[~hit], w[~hit], live[~hit]
+    # Inserts: append batch-order-first occurrences not already live.
+    fresh = ~np.isin(ik, live)
+    stats["dup_inserts"] += int(len(ik) - fresh.sum())
+    stats["inserted"] = int(fresh.sum())
+    keep = np.sort(i_first[fresh])  # batch order, not key order
+    src = np.concatenate([src, ins[keep, 0]])
+    dst = np.concatenate([dst, ins[keep, 1]])
+    w = np.concatenate([w, np.ones(len(keep), np.float32)])
+    out = EdgeList(
+        src=jnp.asarray(src.astype(np.int32)),
+        dst=jnp.asarray(dst.astype(np.int32)),
+        weight=jnp.asarray(w.astype(np.float32)),
+        mask=jnp.asarray(np.ones(len(src), bool)),
+        n_nodes=n,
+        directed=False,
+    )
+    return out, stats
+
+
 def dedup_edges(
     src: np.ndarray, dst: np.ndarray, *, directed: bool
 ) -> Tuple[np.ndarray, np.ndarray]:

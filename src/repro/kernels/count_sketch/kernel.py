@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import hashing
+
 
 def _cs_kernel(x_ref, w_ref, ah_ref, ch_ref, ag_ref, cg_ref, out_ref, *, n_buckets, col_chunk):
     eb = pl.program_id(1)
@@ -41,12 +43,9 @@ def _cs_kernel(x_ref, w_ref, ah_ref, ch_ref, ag_ref, cg_ref, out_ref, *, n_bucke
     a_g = ag_ref[0]
     c_g = cg_ref[0]
 
-    # multiply-shift bucket hash (wrap-around uint32) + xorshift finalizer.
-    hb = a_h * x + c_h
-    hb = hb ^ (hb >> 16)
-    bucket = (hb % jnp.uint32(n_buckets)).astype(jnp.int32)
-    hg = a_g * x + c_g
-    sign = jnp.where((hg >> 31) == 0, 1.0, -1.0).astype(jnp.float32)
+    # Shared multiply-shift family (plain uint32 jnp ops, traceable here).
+    bucket = hashing.bucket32(hashing.mix32(a_h, c_h, x), n_buckets)
+    sign = hashing.sign32(hashing.mix32(a_g, c_g, x))
     val = (w * sign)[None, :]  # [1, E]
 
     n_chunks = n_buckets // col_chunk

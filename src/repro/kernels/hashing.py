@@ -1,0 +1,68 @@
+"""The ONE multiply-shift hash family (uint32, int32-safe).
+
+Every sketch in the system hashes node ids (Count-Sketch §5.1) or edge
+id pairs (the ℓ0-sampling sketch of the turnstile runtime) with the same
+Dietzfelbinger-style wrap-around multiply-shift mix: odd uint32 multiplier,
+uint32 offset, mod-2^32 arithmetic, xorshift finalizer.  This module is the
+single spelling of that family — ``core/countsketch.py`` and
+``kernels/l0_sampler/`` both delegate here, and the Pallas kernels inline
+the SAME functions (they are plain ``jnp`` uint32 ops, traceable inside
+``pallas_call``), so host references, jit programs and TPU kernels agree
+bit for bit.
+
+Everything is int32-safe: no value ever needs x64, overflow is the
+mod-2^32 wrap the family is built on (both XLA and numpy wrap uint32
+array arithmetic silently).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AVALANCHE",
+    "bucket32",
+    "mix32",
+    "mix32_pair",
+    "sign32",
+]
+
+# Odd avalanche multiplier for the pair mix's second round (the level /
+# fingerprint hashes read HIGH bits of a two-term sum, which a single
+# multiply-shift round leaves too linear in (x, y)).
+AVALANCHE = 0x7FEB352D
+
+
+def mix32(a, c, x):
+    """Wrap-around multiply-shift mix of one key: ``h = a*x + c`` (mod
+    2^32), xorshift-finalized.  ``a`` must be odd.  All operands uint32
+    (broadcasting is the caller's concern)."""
+    h = a * x + c
+    return h ^ (h >> 16)
+
+
+def bucket32(h, n_buckets: int):
+    """int32 bucket index from a mixed uint32 (the Count-Sketch table
+    column rule: low bits after the finalizer)."""
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def sign32(h):
+    """±1.0 float32 sign from a mixed uint32's top bit (the Count-Sketch
+    g_i rule)."""
+    return jnp.where((h >> 31) == 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def mix32_pair(a_x, a_y, c, x, y):
+    """Wrap-around mix of a key PAIR: ``h = a_x*x + a_y*y + c`` (mod 2^32)
+    with a two-round finalizer (xorshift, odd avalanche multiply,
+    xorshift).  The ℓ0 sampler hashes undirected edges ``(u, v)`` with
+    this — no 64-bit edge id is ever formed, so the family stays
+    int32-safe for any node count that fits int32.  Both multipliers must
+    be odd; the extra rounds decorrelate the HIGH bits (the geometric
+    level assignment reads them) from the linear structure of the sum."""
+    h = a_x * x + a_y * y + c
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(AVALANCHE)
+    return h ^ (h >> 15)

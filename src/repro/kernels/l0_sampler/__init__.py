@@ -1,0 +1,31 @@
+"""ℓ0-sampling sketch kernel family (turnstile runtime substrate).
+
+Sibling of ``count_sketch/`` with the same split: ``ops.py`` is the public
+jit'd wrapper + parameter plumbing, ``ref.py`` the pure-jnp oracle,
+``kernel.py`` the Pallas TPU kernel (``interpret=None`` → compiled on TPU,
+interpreter elsewhere).
+"""
+
+from repro.kernels.l0_sampler.ops import (
+    L0Params,
+    canonicalize_edges,
+    edge_cells,
+    edge_fingerprint,
+    edge_level,
+    l0_delta,
+    l0_sketch_shape,
+    l0_update,
+    make_l0_params,
+)
+
+__all__ = [
+    "L0Params",
+    "canonicalize_edges",
+    "edge_cells",
+    "edge_fingerprint",
+    "edge_level",
+    "l0_delta",
+    "l0_sketch_shape",
+    "l0_update",
+    "make_l0_params",
+]

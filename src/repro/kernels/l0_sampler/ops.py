@@ -1,0 +1,203 @@
+"""ℓ0-sampling sketch over the undirected edge universe (MTVV, arXiv
+1506.04417): geometric-level subsampling + per-cell 1-sparse recovery.
+
+The sketch state is one int32 tensor ``[L, d, C, 4]``:
+
+* ``L`` geometric levels — edge e lands at ``level(e) = min(clz(h(e)), L-1)``
+  for a uint32 pair hash ``h``, so level l holds each edge independently
+  with probability ``2^-l`` (level 0 holds EVERYTHING: summing levels
+  ``>= l`` — a suffix sum, itself linear — is a Bernoulli(2^-l) sample of
+  the live edge set, and ``l = 0`` degenerates to exact recovery whenever
+  the graph fits the decoder budget).
+* ``d`` hash tables of ``C`` cells each (IBLT-style, d=3 default) so the
+  host decoder can peel 1-sparse cells.
+* 4 int32 fields per cell: ``(count, sum_u, sum_v, fingerprint)``.  All
+  arithmetic is wrap-around mod 2^32 (int32 adds), hence every field is
+  LINEAR in the update stream: insert = +1 row, delete = -1 row,
+  ``sketch(A) + sketch(B) == sketch(A ∪ B)`` exactly, and an
+  insert-then-delete leaves all-zeros.  The fingerprint is a second pair
+  hash folded in with the same ±1 sign; a cell is a decodable singleton
+  iff ``count == 1`` and the fingerprint re-hashes consistently.
+
+Level assignment is COMPARE-BASED — ``level = Σ_{l=1}^{L-1} [h < 2^(32-l)]``
+— rather than ``clz`` so the Pallas kernel and the jnp reference share the
+exact arithmetic (no dependence on ``lax.clz`` lowering).
+
+Edges are canonicalized to ``u = min < v = max`` before hashing;
+self-loops and padding rows get sign 0 and vanish from every field.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import hashing
+
+__all__ = [
+    "L0Params",
+    "canonicalize_edges",
+    "edge_cells",
+    "edge_fingerprint",
+    "edge_level",
+    "l0_delta",
+    "l0_sketch_shape",
+    "l0_update",
+    "make_l0_params",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class L0Params:
+    """Hash parameters for an L-level, d-table, C-cell ℓ0 sketch.
+
+    Pair hashes take ``(a_x, a_y, c)`` triples (odd multipliers); the
+    level and fingerprint hashes are single triples, the cell hash keeps
+    one triple per table.  Two sketches are mergeable iff their params
+    (and static shape) match — same seed through
+    :func:`make_l0_params` guarantees that.
+    """
+
+    a_lvl: jax.Array  # uint32[2] odd multipliers for the level hash
+    c_lvl: jax.Array  # uint32[1] offset
+    a_fp: jax.Array  # uint32[2] odd multipliers for the fingerprint hash
+    c_fp: jax.Array  # uint32[1] offset
+    a_cell: jax.Array  # uint32[d, 2] odd multipliers for the cell hashes
+    c_cell: jax.Array  # uint32[d] offsets
+    n_levels: int = dataclasses.field(metadata=dict(static=True))
+    n_cells: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_tables(self) -> int:
+        return self.a_cell.shape[0]
+
+
+def make_l0_params(
+    n_levels: int = 32, n_cells: int = 1 << 14, n_tables: int = 3, seed: int = 0
+) -> L0Params:
+    rng = np.random.default_rng(seed)
+    odd = lambda *s: (rng.integers(0, 1 << 31, size=s, dtype=np.int64) * 2 + 1).astype(
+        np.uint32
+    )
+    any32 = lambda *s: rng.integers(0, 1 << 32, size=s, dtype=np.int64).astype(np.uint32)
+    return L0Params(
+        a_lvl=jnp.asarray(odd(2)),
+        c_lvl=jnp.asarray(any32(1)),
+        a_fp=jnp.asarray(odd(2)),
+        c_fp=jnp.asarray(any32(1)),
+        a_cell=jnp.asarray(odd(n_tables, 2)),
+        c_cell=jnp.asarray(any32(n_tables)),
+        n_levels=int(n_levels),
+        n_cells=int(n_cells),
+    )
+
+
+def l0_sketch_shape(p: L0Params) -> tuple:
+    return (p.n_levels, p.n_tables, p.n_cells, 4)
+
+
+def canonicalize_edges(src: jax.Array, dst: jax.Array, sgn: jax.Array):
+    """(u=min, v=max, sgn) with self-loops sign-zeroed.
+
+    Idempotent; every update path runs it so the sketch only ever sees
+    the canonical undirected spelling of an edge.  Padding rows arrive
+    with ``sgn == 0`` and stay that way.
+    """
+    u = jnp.minimum(src, dst)
+    v = jnp.maximum(src, dst)
+    sgn = jnp.where(u == v, jnp.int32(0), sgn.astype(jnp.int32))
+    return u, v, sgn
+
+
+def level_from_hash(h: jax.Array, n_levels: int) -> jax.Array:
+    """int32 geometric level from a mixed uint32: compare-based
+    ``Σ_{l=1}^{L-1} [h < 2^(32-l)]`` (== min(clz(h), L-1)).  Plain jnp
+    uint32 ops so the Pallas kernel inlines the identical arithmetic."""
+    if n_levels <= 1:
+        return jnp.zeros(h.shape, jnp.int32)
+    r = jax.lax.broadcasted_iota(jnp.uint32, (n_levels - 1,) + h.shape, 0)
+    thr = jnp.uint32(1) << (jnp.uint32(31) - r)
+    return jnp.sum((h[None] < thr).astype(jnp.int32), axis=0)
+
+
+def edge_level(p: L0Params, u: jax.Array, v: jax.Array) -> jax.Array:
+    """int32[E] level of each canonical edge."""
+    h = hashing.mix32_pair(
+        p.a_lvl[0], p.a_lvl[1], p.c_lvl[0], u.astype(jnp.uint32), v.astype(jnp.uint32)
+    )
+    return level_from_hash(h, p.n_levels)
+
+
+def edge_cells(p: L0Params, u: jax.Array, v: jax.Array) -> jax.Array:
+    """int32[d, E] cell index of each canonical edge in every table."""
+    h = hashing.mix32_pair(
+        p.a_cell[:, 0:1],
+        p.a_cell[:, 1:2],
+        p.c_cell[:, None],
+        u.astype(jnp.uint32)[None, :],
+        v.astype(jnp.uint32)[None, :],
+    )
+    return hashing.bucket32(h, p.n_cells)
+
+
+def edge_fingerprint(p: L0Params, u: jax.Array, v: jax.Array) -> jax.Array:
+    """uint32[E] fingerprint of each canonical edge."""
+    return hashing.mix32_pair(
+        p.a_fp[0], p.a_fp[1], p.c_fp[0], u.astype(jnp.uint32), v.astype(jnp.uint32)
+    )
+
+
+def l0_delta(
+    src: jax.Array,  # int32[E] endpoint a (any order; canonicalized here)
+    dst: jax.Array,  # int32[E] endpoint b
+    sgn: jax.Array,  # int32[E] +1 insert / -1 delete / 0 padding
+    params: L0Params,
+    *,
+    use_pallas: bool = True,
+    block_e: int = 256,
+    interpret: Optional[bool] = None,  # None: compiled on TPU, interpreter elsewhere
+) -> jax.Array:
+    """Sketch DELTA int32[L, d, C, 4] of one signed edge batch.
+
+    Apply with ``tables + l0_delta(...)`` (see :func:`l0_update`); the
+    delta itself is the sketch of the batch, so deltas merge by addition
+    exactly like full sketches.
+    """
+    u, v, s = canonicalize_edges(src, dst, sgn)
+    if not use_pallas:
+        from repro.kernels.l0_sampler.ref import l0_delta_ref
+
+        return l0_delta_ref(u, v, s, params)
+    from repro.kernels.l0_sampler.kernel import l0_delta_pallas
+
+    e = u.shape[0]
+    pad = (-e) % block_e
+    if pad:
+        u = jnp.pad(u, (0, pad))
+        v = jnp.pad(v, (0, pad))
+        s = jnp.pad(s, (0, pad))
+    return l0_delta_pallas(
+        u,
+        v,
+        s,
+        params.a_lvl,
+        params.c_lvl,
+        params.a_fp,
+        params.c_fp,
+        params.a_cell,
+        params.c_cell,
+        n_levels=params.n_levels,
+        n_cells=params.n_cells,
+        block_e=block_e,
+        interpret=interpret,
+    )
+
+
+def l0_update(tables: jax.Array, src, dst, sgn, params: L0Params, **kw) -> jax.Array:
+    """New sketch state: ``tables + l0_delta(src, dst, sgn, params)``."""
+    return tables + l0_delta(src, dst, sgn, params, **kw)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the ℓ0-sampler update: one segment_sum over the
+flattened (level, table, cell) space.  This IS the CPU fast path (the
+dispatch rule only picks the Pallas kernel on TPU), not just a test
+oracle, so it stays jit-friendly: fixed shapes in, one fused scatter out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.l0_sampler.ops import (
+    L0Params,
+    edge_cells,
+    edge_fingerprint,
+    edge_level,
+)
+
+
+def l0_delta_ref(
+    u: jax.Array,  # int32[E] canonical min endpoint
+    v: jax.Array,  # int32[E] canonical max endpoint
+    sgn: jax.Array,  # int32[E] ±1 / 0
+    params: L0Params,
+) -> jax.Array:
+    """Sketch delta int32[L, d, C, 4] (wrap-around int32 sums)."""
+    L, d, C = params.n_levels, params.n_tables, params.n_cells
+    lvl = edge_level(params, u, v)  # [E]
+    cells = edge_cells(params, u, v)  # [d, E]
+    fp = jax.lax.bitcast_convert_type(edge_fingerprint(params, u, v), jnp.int32)
+    flat = (
+        lvl[None, :] * (d * C) + jnp.arange(d, dtype=jnp.int32)[:, None] * C + cells
+    )  # [d, E]
+    vals = jnp.stack([sgn, sgn * u, sgn * v, sgn * fp], axis=-1)  # [E, 4]
+    vals_d = jnp.broadcast_to(vals[None], (d,) + vals.shape).reshape(-1, 4)
+    delta = jax.ops.segment_sum(vals_d, flat.reshape(-1), num_segments=L * d * C)
+    return delta.reshape(L, d, C, 4)

@@ -1,2 +1,3 @@
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.densest import DensestQueryEngine, QueryResult
+from repro.serve.turnstile import TurnstileDensityService

@@ -172,6 +172,38 @@ class DensestQueryEngine:
         self.lanes_solved = 0
         self.pad_lanes = 0
         self.bucket_histogram: Dict[Tuple[int, int], int] = {}
+        # Optional whole-graph turnstile sidecar (attach_turnstile).
+        self._turnstile = None
+
+    # -- turnstile attachment -----------------------------------------------
+    def attach_turnstile(self, service) -> "DensestQueryEngine":
+        """Attaches a live :class:`repro.serve.turnstile.TurnstileDensityService`
+        so this engine can also answer whole-graph "current density" probes
+        between its per-seed batches.  The sidecar tracks the DYNAMIC graph
+        (its own ±edge stream); the engine's host CSR stays the static
+        snapshot it was built from — the two views are independent by design.
+        """
+        if not (hasattr(service, "density") and hasattr(service, "apply")):
+            raise ValueError(
+                "attach_turnstile expects a TurnstileDensityService-like "
+                "object with apply()/density()"
+            )
+        if service.n_nodes != self.n_nodes:
+            raise ValueError(
+                f"turnstile service tracks n_nodes={service.n_nodes}, "
+                f"engine serves n_nodes={self.n_nodes}"
+            )
+        self._turnstile = service
+        return self
+
+    def current_density(self) -> float:
+        """The attached turnstile sidecar's current approximate maximum
+        density (cached between update batches)."""
+        if self._turnstile is None:
+            raise ValueError(
+                "no turnstile service attached; call attach_turnstile() first"
+            )
+        return self._turnstile.density()
 
     # -- extraction ---------------------------------------------------------
     def _adjacency_rows(self, nodes: np.ndarray):

@@ -1,0 +1,109 @@
+"""Serving hook for the turnstile runtime: one live sketch, cheap
+"current density" answers between update batches.
+
+:class:`TurnstileDensityService` owns a
+:class:`~repro.core.turnstile.TurnstileDensest` and adds the serving
+concern the core driver deliberately doesn't have: query-result CACHING
+keyed on a dirty flag.  Updates are absorbed immediately (the sketch is
+device-resident and update-linear; an ``apply`` is one cached jitted
+program), but the sampled peel only reruns when an update actually landed
+since the last query — repeated density reads between batches are O(1)
+host lookups.
+
+A :class:`~repro.serve.densest.DensestQueryEngine` can
+:meth:`~repro.serve.densest.DensestQueryEngine.attach_turnstile` one of
+these, answering whole-graph "how dense is the graph RIGHT NOW" probes
+from the same process that serves per-seed ego-net queries.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.api import DenseSubgraphResult, Problem, Solver
+from repro.core.turnstile import TurnstileDensest
+
+__all__ = ["TurnstileDensityService"]
+
+
+class TurnstileDensityService:
+    """A live turnstile driver with dirty-flag query caching.
+
+    ``apply()`` feeds ±edge batches to the sketch and marks the cached
+    answer stale; ``result()`` / ``density()`` re-query ONLY when stale.
+    Counters: ``updates_applied`` / ``batches_applied`` mirror the
+    sketch's, ``queries_served`` counts reads, ``queries_computed`` counts
+    actual sampled peels (the difference is cache traffic).
+    """
+
+    def __init__(
+        self,
+        n_nodes: int,
+        problem: Optional[Problem] = None,
+        *,
+        solver: Optional[Solver] = None,
+        cache_dir: Optional[str] = None,
+        **driver_kw,
+    ):
+        if problem is None:
+            problem = Problem.undirected(stream_mode="turnstile")
+        if solver is None:
+            solver = Solver(cache_dir=cache_dir)
+        self.driver = TurnstileDensest(
+            n_nodes, problem, solver=solver, **driver_kw
+        )
+        self.solver = solver
+        self._cached: Optional[DenseSubgraphResult] = None
+        self._dirty = True  # an empty graph is still a valid first query
+        self.queries_served = 0
+        self.queries_computed = 0
+
+    @property
+    def n_nodes(self) -> int:
+        return self.driver.n_nodes
+
+    @property
+    def updates_applied(self) -> int:
+        return self.driver.sketch.updates_applied
+
+    @property
+    def batches_applied(self) -> int:
+        return self.driver.sketch.batches_applied
+
+    def apply(
+        self,
+        insert_edges: Union[np.ndarray, Tuple, None] = None,
+        delete_edges: Union[np.ndarray, Tuple, None] = None,
+    ) -> "TurnstileDensityService":
+        """Absorbs one ±edge batch and marks the cached answer stale."""
+        before = self.driver.sketch.batches_applied
+        self.driver.apply(insert_edges, delete_edges)
+        if self.driver.sketch.batches_applied != before:  # empty batch: no-op
+            self._dirty = True
+        return self
+
+    def result(self) -> DenseSubgraphResult:
+        """The current densest-subgraph answer (recomputed only if an
+        update arrived since the last query)."""
+        self.queries_served += 1
+        if self._dirty or self._cached is None:
+            self._cached = self.driver.query()
+            self.queries_computed += 1
+            self._dirty = False
+        return self._cached
+
+    def density(self) -> float:
+        """Current (1+eps)·(2+2eps)-approximate maximum density."""
+        return float(self.result().best_density)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "updates_applied": self.updates_applied,
+            "batches_applied": self.batches_applied,
+            "queries_served": self.queries_served,
+            "queries_computed": self.queries_computed,
+            "recovery_failures": self.driver.sketch.recovery_failures,
+            "update_trace_count": self.driver.sketch.trace_count,
+        }
