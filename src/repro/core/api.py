@@ -809,6 +809,19 @@ class _DiskBackedProgram:
         compiled = self._jit.lower(*args).compile()
         if not progcache.store(path, disk_key, compiled):
             self._solver.disk_store_errors += 1
+            # Rate-limited observability: warn ONCE per solver on the first
+            # failed publish (every subsequent failure only counts) — a
+            # full/read-only cache dir degrades cold-start, not answers.
+            if self._solver.disk_store_errors == 1:
+                import logging
+
+                logging.getLogger("repro.progcache").warning(
+                    "persistent program cache store failed (dir=%s); solves "
+                    "continue but fresh processes will recompile — further "
+                    "failures are counted in Solver.disk_store_errors "
+                    "without logging",
+                    self._dir,
+                )
         return compiled
 
     def __call__(self, *args):
@@ -869,6 +882,22 @@ class Solver:
         self.disk_hits = 0
         self.disk_misses = 0
         self.disk_store_errors = 0
+
+    def stats(self) -> Dict[str, int]:
+        """All cache/compile counters in one dict — the observability
+        surface bench_api/bench_serve and the serving stats() hooks read
+        (disk_store_errors > 0 means the persistent tier is degraded:
+        solves still succeed but fresh processes will recompile)."""
+        return {
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_evictions": self.cache_evictions,
+            "trace_count": self.trace_count,
+            "disk_hits": self.disk_hits,
+            "disk_misses": self.disk_misses,
+            "disk_store_errors": self.disk_store_errors,
+            "cached_programs": len(self._programs),
+        }
 
     # -- cache plumbing -----------------------------------------------------
     def _mark_trace(self) -> None:

@@ -37,6 +37,8 @@ import os
 import pickle
 from typing import Any, Callable, Optional
 
+from repro import faults
+
 # Bump to invalidate every existing cache entry on a format change.
 FORMAT_VERSION = 1
 
@@ -77,6 +79,7 @@ def store(path: str, key: Any, compiled) -> bool:
     to ``path`` atomically.  Best-effort: returns False instead of raising —
     a failed publish must never fail the solve that produced the program."""
     try:
+        faults.fire("progcache.store", key=path)
         from jax.experimental import serialize_executable
 
         from repro.ioutil import atomic_write_file
@@ -104,6 +107,7 @@ def load(path: str, key: Any) -> Optional[Callable]:
     runtime cannot deserialize.  The caller recompiles and overwrites.
     """
     try:
+        faults.fire("progcache.load", key=path)
         with open(path, "rb") as f:
             entry = pickle.loads(f.read())
         if entry.get("fingerprint") != fingerprint():

@@ -36,6 +36,7 @@ import os
 import shutil
 import threading
 import time
+import warnings
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterator, Optional, Set, Tuple
@@ -43,6 +44,8 @@ from typing import Callable, Dict, Iterator, Optional, Set, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import faults
 
 Chunk = Tuple[np.ndarray, np.ndarray, np.ndarray]  # (src, dst, weight)
 
@@ -194,6 +197,7 @@ class StreamingDensest:
             return
         from repro.ioutil import atomic_write_file
 
+        faults.fire("streaming.checkpoint_save")
         atomic_write_file(
             path,
             lambda f: np.savez(
@@ -208,17 +212,38 @@ class StreamingDensest:
         )
 
     def _load(self) -> Optional[StreamState]:
+        """Fail-open checkpoint read: a corrupt or truncated checkpoint
+        (torn copy, bad disk, injected fault) warns, quarantines the bad
+        file with ONE atomic rename (``<path>.corrupt`` — kept for the
+        operator's post-mortem) and resumes as a fresh run, instead of
+        crashing the restart path the checkpoint exists to protect."""
         path = self._ckpt_path()
         if path is None or not os.path.exists(path):
             return None
-        z = np.load(path)
-        return StreamState(
-            alive=z["alive"],
-            best_alive=z["best_alive"],
-            best_rho=float(z["best_rho"]),
-            pass_idx=int(z["pass_idx"]),
-            history=[tuple(r) for r in z["history"]],
-        )
+        try:
+            faults.fire("streaming.checkpoint_load")
+            z = np.load(path)
+            return StreamState(
+                alive=z["alive"],
+                best_alive=z["best_alive"],
+                best_rho=float(z["best_rho"]),
+                pass_idx=int(z["pass_idx"]),
+                history=[tuple(r) for r in z["history"]],
+            )
+        except Exception as e:  # noqa: BLE001 — quarantine + start fresh
+            quarantine = path + ".corrupt"
+            try:
+                os.replace(path, quarantine)
+            except OSError:
+                quarantine = "<rename failed>"
+            warnings.warn(
+                f"checkpoint {path} is unreadable "
+                f"({type(e).__name__}: {e}); quarantined to {quarantine}, "
+                "starting fresh",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return None
 
     # ----- one streaming pass --------------------------------------------
     def _pass_stats(
@@ -272,6 +297,10 @@ class StreamingDensest:
 
         def work(idx: int, chunk: Chunk) -> int:
             t0 = time.perf_counter()
+            # Chaos hook: every ATTEMPT (first issue, speculative duplicate,
+            # retry) of a chunk is one hit at this site, keyed by chunk
+            # index — so tests drive the real retry/speculation machinery.
+            faults.fire("streaming.chunk", key=idx)
             s, d, w = chunk
             dd, tt, cc = _chunk_stats(
                 jnp.asarray(s), jnp.asarray(d), jnp.asarray(w), alive
@@ -491,18 +520,22 @@ class StreamingDensest:
                 )
             try:
                 np.save(os.path.join(rung_dir, "id_map.npy"), new_id_map)
+                # Publish is atomic (manifest last); a failure here — disk
+                # full, injected spill_publish fault — aborts the partial
+                # rung so resume can never adopt it, and the error
+                # surfaces (the ladder has no stream to continue on).
+                spill.finalize(
+                    caps=caps,
+                    n_pad=int(n_pad),
+                    n_alive=int(n_alive),
+                    n_nodes=int(self.n_nodes),
+                    eps=self.eps,  # guards resume against foreign rungs
+                    pass_idx=int(pass_idx),
+                    rung=int(self.compactions),
+                )
             except BaseException:
                 spill.abort()
                 raise
-            spill.finalize(
-                caps=caps,
-                n_pad=int(n_pad),
-                n_alive=int(n_alive),
-                n_nodes=int(self.n_nodes),
-                eps=self.eps,  # guards resume against a foreign run's rungs
-                pass_idx=int(pass_idx),
-                rung=int(self.compactions),
-            )
             prev = self._cur_rung_dir
             self._cur_rung_dir = rung_dir
             if prev is not None and prev != rung_dir:

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.core.api import DenseSubgraphResult, Problem, Solver, default_solver
 from repro.graph.edgelist import EdgeList
 from repro.graph.partition import pow2_bucket
@@ -198,6 +199,7 @@ class TurnstileSketch:
         self.batches_applied = 0
         self.updates_applied = 0
         self.recovery_failures = 0
+        self.recovery_escalations = 0  # recoveries that succeeded above l*
         sketch = self
 
         def _update(tables, u, v, s):
@@ -319,9 +321,17 @@ class TurnstileSketch:
             # Reduced on device: only the [d, C, 4] aggregate crosses to
             # the host, not the full [L, d, C, 4] tensor.
             agg = np.asarray(self._agg_fn(self.tables, level))
-            decoded = self._decode(agg, level)
+            try:
+                # Injection point for chaos tests: a fired fault is a
+                # decode failure, exercising the real escalation path.
+                faults.fire("turnstile.decode", key=level)
+                decoded = self._decode(agg, level)
+            except faults.InjectedFault:
+                decoded = None
             if decoded is not None:
                 edges, rounds = decoded
+                if level > l_star:
+                    self.recovery_escalations += 1
                 info = {
                     "level": level,
                     "first_level_tried": l_star,

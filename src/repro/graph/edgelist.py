@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -289,6 +291,9 @@ class EdgeSpillWriter:
         does :func:`open_edge_spill` see the spill."""
         from repro.ioutil import atomic_write_file
 
+        # Chaos hook: a publish failure must leave NO manifest (the caller
+        # aborts the rung; resume ignores unfinalized spills).
+        faults.fire("edgelist.spill_publish")
         for f in self._files.values():
             f.flush()
             os.fsync(f.fileno())

@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.densest import DensestQueryEngine, QueryResult
+from repro.serve.resilience import CircuitBreaker, ResilienceConfig
 from repro.serve.turnstile import TurnstileDensityService

@@ -45,9 +45,11 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import faults
 from repro.core.api import Problem, Solver
 from repro.graph.edgelist import EdgeList, to_csr
 from repro.graph.partition import pow2_bucket
+from repro.serve.resilience import CircuitBreaker, ResilienceConfig
 
 __all__ = ["DensestQueryEngine", "QueryResult"]
 
@@ -64,6 +66,16 @@ class QueryResult:
     ``nodes`` are ORIGINAL graph ids (bucket pad nodes are filtered out);
     ``density`` is the peel's best density on the padded ego-net buffer —
     a (2+2eps)-approximation of the ego-net's densest subgraph.
+
+    Failure provenance (the resilience contract, docs/resilience.md):
+    ``status`` is ``'ok'`` (the full exact-path answer), ``'degraded'``
+    (a real but weaker answer; ``fallback`` names its source —
+    ``'radius:<r>'``, ``'turnstile_density'`` or ``'last_good'``),
+    ``'rejected'`` (shed at admission by a full bounded queue) or
+    ``'failed'`` (every fallback exhausted).  ``error`` carries the
+    original solve error for every non-``'ok'`` status and ``attempts``
+    counts solve attempts (retries included).  A degraded answer is
+    never fabricated — it is always genuinely computed data.
     """
 
     qid: int
@@ -75,10 +87,23 @@ class QueryResult:
     m_ego: int  # extracted ego-net size (edges)
     bucket: Tuple[int, int, int]  # (node bucket, edge bucket, batch lanes)
     latency_s: float  # submit -> answer (engine clock)
+    status: str = "ok"  # ok | degraded | rejected | failed
+    fallback: Optional[str] = None  # provenance of a degraded answer
+    error: Optional[str] = None  # original error for non-ok statuses
+    attempts: int = 1  # solve attempts spent (0: never reached a solve)
 
     @property
     def size(self) -> int:
         return int(len(self.nodes))
+
+    @property
+    def degraded(self) -> bool:
+        return self.status == "degraded"
+
+    @property
+    def answered(self) -> bool:
+        """True when the query got a real answer (exact or degraded)."""
+        return self.status in ("ok", "degraded")
 
 
 @dataclasses.dataclass
@@ -118,6 +143,8 @@ class DensestQueryEngine:
         node_floor: int = _NODE_FLOOR,
         edge_floor: int = _EDGE_FLOOR,
         time_fn: Callable[[], float] = time.monotonic,
+        resilience: Optional[ResilienceConfig] = None,
+        sleep_fn: Callable[[float], None] = time.sleep,
     ):
         if graph.directed:
             raise ValueError(
@@ -174,6 +201,31 @@ class DensestQueryEngine:
         self.bucket_histogram: Dict[Tuple[int, int], int] = {}
         # Optional whole-graph turnstile sidecar (attach_turnstile).
         self._turnstile = None
+        # Resilience policy (None: legacy behavior except group-failure
+        # isolation, which always holds — see _process).
+        self.resilience = resilience
+        self._sleep = sleep_fn
+        self._breaker: Optional[CircuitBreaker] = (
+            CircuitBreaker(
+                resilience.breaker_threshold,
+                resilience.breaker_cooldown_s,
+                time_fn=time_fn,
+            )
+            if resilience is not None
+            else None
+        )
+        # Rejected-at-admission results waiting to be drained by the next
+        # step()/flush(), and the last-good per-seed answer cache (bounded
+        # by the number of distinct seeds; only kept when the last_good
+        # degrade rung is enabled).
+        self._shed: List[QueryResult] = []
+        self._last_good: Dict[int, QueryResult] = {}
+        self.queries_rejected = 0
+        self.queries_degraded = 0
+        self.queries_failed = 0
+        self.solve_retries = 0
+        self.breaker_open_skips = 0
+        self.deadline_stops = 0
 
     # -- turnstile attachment -----------------------------------------------
     def attach_turnstile(self, service) -> "DensestQueryEngine":
@@ -300,11 +352,39 @@ class DensestQueryEngine:
     # -- queueing -----------------------------------------------------------
     def submit(self, seed: int, radius: Optional[int] = None) -> int:
         """Enqueues a seed query; returns its qid.  Nothing runs until a
-        batch is due (``step``) or forced (``flush``)."""
+        batch is due (``step``) or forced (``flush``).
+
+        With ``resilience.max_queue`` set, a full admission queue SHEDS the
+        query instead of growing without bound: the qid is still returned,
+        and the next drain yields a ``status='rejected'`` result for it."""
         if not (0 <= seed < self.n_nodes):
             raise ValueError(f"seed={seed} not in [0, {self.n_nodes})")
         qid = self._next_qid
         self._next_qid += 1
+        cfg = self.resilience
+        if (
+            cfg is not None
+            and cfg.max_queue is not None
+            and len(self._queue) >= cfg.max_queue
+        ):
+            self.queries_rejected += 1
+            self._shed.append(
+                QueryResult(
+                    qid=qid,
+                    seed=int(seed),
+                    nodes=np.empty(0, np.int64),
+                    density=float("nan"),
+                    seed_in_set=False,
+                    n_ego=0,
+                    m_ego=0,
+                    bucket=(0, 0, 0),
+                    latency_s=0.0,
+                    status="rejected",
+                    error=f"queue full (max_queue={cfg.max_queue})",
+                    attempts=0,
+                )
+            )
+            return qid
         self._queue.append(
             _Pending(
                 qid=qid, seed=int(seed),
@@ -328,18 +408,25 @@ class DensestQueryEngine:
         now = self._time() if now is None else now
         return (now - self._queue[0].submitted_at) * 1000.0 >= self.max_wait_ms
 
+    def _drain_shed(self) -> List[QueryResult]:
+        out, self._shed = self._shed, []
+        return out
+
     def step(self, now: Optional[float] = None) -> List[QueryResult]:
         """Flushes ONE batch if due (at most ``max_batch`` queries, FIFO);
-        returns its results, or [] when nothing is due yet."""
+        returns its results (plus any shed ``rejected`` results), or []
+        when nothing is due yet."""
         if not self.batch_due(now):
-            return []
+            return self._drain_shed()
         take = min(self.max_batch, len(self._queue))
-        return self._process([self._queue.popleft() for _ in range(take)])
+        out = self._drain_shed()
+        out.extend(self._process([self._queue.popleft() for _ in range(take)]))
+        return out
 
     def flush(self) -> List[QueryResult]:
         """Drains the whole queue now, deadline or not, in FIFO batches of
         ``max_batch``."""
-        out: List[QueryResult] = []
+        out: List[QueryResult] = self._drain_shed()
         while self._queue:
             take = min(self.max_batch, len(self._queue))
             out.extend(
@@ -365,9 +452,176 @@ class DensestQueryEngine:
         return [by_qid[q] for q in qids]
 
     # -- the batched solve --------------------------------------------------
+    @staticmethod
+    def _members(nodes: np.ndarray, alive_row: np.ndarray) -> np.ndarray:
+        """Original-id members of one lane's best set (pad nodes dropped)."""
+        local = np.nonzero(alive_row)[0]
+        local = local[local < len(nodes)]  # drop isolated pad nodes
+        return nodes[local]
+
+    @staticmethod
+    def _seed_in(member_nodes: np.ndarray, seed: int) -> bool:
+        pos = np.searchsorted(member_nodes, seed)
+        return bool(pos < len(member_nodes) and member_nodes[pos] == seed)
+
+    def _solve_group(
+        self,
+        gkey: Tuple[int, int],
+        stacked: EdgeList,
+        oldest_submitted_at: float,
+    ):
+        """Solves one stacked bucket group under the resilience policy:
+        breaker gate, bounded retry with deterministic backoff, deadline
+        cut-off.  Returns ``(result_or_None, error_or_None, attempts)`` —
+        it never raises, so a failed group can only poison its own lanes."""
+        cfg = self.resilience
+        breaker = self._breaker
+        if breaker is not None and not breaker.allow(gkey):
+            self.breaker_open_skips += 1
+            return None, f"CircuitOpen: breaker open for bucket {gkey}", 0
+        max_retries = cfg.max_retries if cfg is not None else 0
+        attempts = 0
+        while True:
+            attempts += 1
+            try:
+                faults.fire("serve.solve", key=gkey)
+                res = self.solver.solve_batch(stacked, self.problem)
+            except Exception as e:  # noqa: BLE001 — isolate, degrade, report
+                err = f"{type(e).__name__}: {e}"
+                if breaker is not None:
+                    breaker.record_failure(gkey)
+                retry = attempts  # 1-based number of the NEXT retry
+                if retry > max_retries:
+                    return None, err, attempts
+                if cfg is not None and cfg.deadline_ms is not None:
+                    # The first attempt always ran; further retries are
+                    # granted only while the group's oldest query still
+                    # has deadline budget.
+                    waited_ms = (self._time() - oldest_submitted_at) * 1000.0
+                    if waited_ms >= cfg.deadline_ms:
+                        self.deadline_stops += 1
+                        return None, err, attempts
+                self.solve_retries += 1
+                if cfg is not None:
+                    delay = cfg.backoff_s(retry, key=gkey)
+                    if delay > 0:
+                        self._sleep(delay)
+                continue
+            if breaker is not None:
+                breaker.record_success(gkey)
+            return res, None, attempts
+
+    def _radius_fallback(
+        self, q: _Pending, err: str, attempts: int
+    ) -> Optional[QueryResult]:
+        """The first degrade rung: re-extract at shrinking radius and solve
+        each ego-net as a single (unbatched) program.  Real data or None."""
+        for r in range(q.radius - 1, 0, -1):
+            try:
+                padded, nodes = self.extract(q.seed, r)
+                faults.fire("serve.solve", key=("fallback", q.qid, r))
+                res = self.solver.solve(padded, self.problem)
+            except Exception:  # noqa: BLE001 — try the next rung down
+                attempts += 1
+                continue
+            attempts += 1
+            member_nodes = self._members(nodes, np.asarray(res.best_alive))
+            return QueryResult(
+                qid=q.qid,
+                seed=q.seed,
+                nodes=member_nodes,
+                density=float(np.asarray(res.best_density)),
+                seed_in_set=self._seed_in(member_nodes, q.seed),
+                n_ego=int(len(nodes)),
+                m_ego=int(np.asarray(padded.mask).sum()),
+                bucket=(int(padded.n_nodes), int(padded.n_edges_padded), 1),
+                latency_s=float(self._time() - q.submitted_at),
+                status="degraded",
+                fallback=f"radius:{r}",
+                error=err,
+                attempts=attempts,
+            )
+        return None
+
+    def _fallback(
+        self,
+        q: _Pending,
+        n_ego: int,
+        m_ego: int,
+        bucket: Tuple[int, int, int],
+        err: str,
+        attempts: int,
+    ) -> QueryResult:
+        """The degradation ladder for one poisoned lane: smaller-radius
+        ego-net -> cached turnstile density -> last-good cached answer ->
+        explicit failure.  Every rung returns REAL data; nothing is ever
+        fabricated (docs/resilience.md)."""
+        cfg = self.resilience
+        if cfg is not None:
+            if cfg.degrade_radius and q.radius > 1:
+                res = self._radius_fallback(q, err, attempts)
+                if res is not None:
+                    self.queries_degraded += 1
+                    return res
+            if cfg.degrade_turnstile and self._turnstile is not None:
+                try:
+                    rho = float(self._turnstile.density())
+                except Exception:  # noqa: BLE001 — rung down
+                    pass
+                else:
+                    self.queries_degraded += 1
+                    return QueryResult(
+                        qid=q.qid,
+                        seed=q.seed,
+                        nodes=np.empty(0, np.int64),
+                        density=rho,
+                        seed_in_set=False,
+                        n_ego=n_ego,
+                        m_ego=m_ego,
+                        bucket=bucket,
+                        latency_s=float(self._time() - q.submitted_at),
+                        status="degraded",
+                        fallback="turnstile_density",
+                        error=err,
+                        attempts=attempts,
+                    )
+            if cfg.degrade_last_good:
+                prev = self._last_good.get(q.seed)
+                if prev is not None:
+                    self.queries_degraded += 1
+                    return dataclasses.replace(
+                        prev,
+                        qid=q.qid,
+                        latency_s=float(self._time() - q.submitted_at),
+                        status="degraded",
+                        fallback="last_good",
+                        error=err,
+                        attempts=attempts,
+                    )
+        self.queries_failed += 1
+        return QueryResult(
+            qid=q.qid,
+            seed=q.seed,
+            nodes=np.empty(0, np.int64),
+            density=float("nan"),
+            seed_in_set=False,
+            n_ego=n_ego,
+            m_ego=m_ego,
+            bucket=bucket,
+            latency_s=float(self._time() - q.submitted_at),
+            status="failed",
+            error=err,
+            attempts=attempts,
+        )
+
     def _process(self, batch: List[_Pending]) -> List[QueryResult]:
         """Extract + coalesce + solve one batch: same-bucket queries become
-        lanes of ONE vmapped solve_batch program per (node, edge) bucket."""
+        lanes of ONE vmapped solve_batch program per (node, edge) bucket.
+
+        Group isolation (the resilience contract, held with OR without a
+        ResilienceConfig): a bucket group whose solve fails poisons only
+        its own lanes — each gets a deterministic per-lane outcome through
+        the degradation ladder — while sibling groups answer normally."""
         groups: Dict[Tuple[int, int], List[Tuple[_Pending, EdgeList, np.ndarray]]]
         groups = {}
         for q in batch:
@@ -375,6 +629,8 @@ class DensestQueryEngine:
             key = (padded.n_nodes, padded.n_edges_padded)
             groups.setdefault(key, []).append((q, padded, nodes))
         results: List[QueryResult] = []
+        cfg = self.resilience
+        keep_last_good = cfg is not None and cfg.degrade_last_good
         for (n_b, m_b), items in groups.items():
             lanes = pow2_bucket(len(items))
             # One stacked (lanes, m_b) buffer per leaf, built HOST-side:
@@ -393,7 +649,25 @@ class DensestQueryEngine:
                 src=src_s, dst=dst_s, weight=w_s, mask=msk_s,
                 n_nodes=int(n_b),
             )
-            res = self.solver.solve_batch(stacked, self.problem)
+            res, err, attempts = self._solve_group(
+                (int(n_b), int(m_b)),
+                stacked,
+                min(q.submitted_at for q, _, _ in items),
+            )
+            if res is None:
+                bucket = (int(n_b), int(m_b), int(lanes))
+                for q, padded, nodes in items:
+                    results.append(
+                        self._fallback(
+                            q,
+                            int(len(nodes)),
+                            int(np.asarray(padded.mask).sum()),
+                            bucket,
+                            err,
+                            attempts,
+                        )
+                    )
+                continue
             best_alive = np.asarray(res.best_alive)
             best_rho = np.asarray(res.best_density)
             done_at = self._time()
@@ -403,30 +677,42 @@ class DensestQueryEngine:
                 self.bucket_histogram.get((n_b, m_b), 0) + lanes
             )
             for j, (q, padded, nodes) in enumerate(items):
-                local = np.nonzero(best_alive[j])[0]
-                local = local[local < len(nodes)]  # drop isolated pad nodes
-                member_nodes = nodes[local]
-                results.append(
-                    QueryResult(
-                        qid=q.qid,
-                        seed=q.seed,
-                        nodes=member_nodes,
-                        density=float(best_rho[j]),
-                        seed_in_set=bool(
-                            np.searchsorted(member_nodes, q.seed)
-                            < len(member_nodes)
-                            and member_nodes[
-                                np.searchsorted(member_nodes, q.seed)
-                            ]
-                            == q.seed
-                        ),
-                        n_ego=int(len(nodes)),
-                        m_ego=int(np.asarray(padded.mask).sum()),
-                        bucket=(int(n_b), int(m_b), int(lanes)),
-                        latency_s=float(done_at - q.submitted_at),
-                    )
+                member_nodes = self._members(nodes, best_alive[j])
+                result = QueryResult(
+                    qid=q.qid,
+                    seed=q.seed,
+                    nodes=member_nodes,
+                    density=float(best_rho[j]),
+                    seed_in_set=self._seed_in(member_nodes, q.seed),
+                    n_ego=int(len(nodes)),
+                    m_ego=int(np.asarray(padded.mask).sum()),
+                    bucket=(int(n_b), int(m_b), int(lanes)),
+                    latency_s=float(done_at - q.submitted_at),
+                    attempts=attempts,
                 )
+                if keep_last_good:
+                    self._last_good[q.seed] = result
+                results.append(result)
         self.queries_answered += len(batch)
         self.batches_flushed += 1
         results.sort(key=lambda r: r.qid)
         return results
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        """Engine counters in one dict (resilience outcomes included)."""
+        return {
+            "queries_answered": self.queries_answered,
+            "batches_flushed": self.batches_flushed,
+            "lanes_solved": self.lanes_solved,
+            "pad_lanes": self.pad_lanes,
+            "queries_rejected": self.queries_rejected,
+            "queries_degraded": self.queries_degraded,
+            "queries_failed": self.queries_failed,
+            "solve_retries": self.solve_retries,
+            "breaker_open_skips": self.breaker_open_skips,
+            "deadline_stops": self.deadline_stops,
+            "breaker_opened": (
+                self._breaker.opened if self._breaker is not None else 0
+            ),
+        }

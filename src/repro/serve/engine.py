@@ -36,6 +36,7 @@ class Request:
     # filled by the engine:
     tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    rejected: bool = False  # shed at admission (bounded queue full)
 
 
 class ServeEngine:
@@ -46,7 +47,10 @@ class ServeEngine:
         n_slots: int = 4,
         max_len: int = 256,
         sampler: Optional[Callable] = None,
+        max_queue: Optional[int] = None,
     ):
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue={max_queue} must be >= 1")
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -66,12 +70,23 @@ class ServeEngine:
         # FIFO admission queue; deque so admission is O(1) per request
         # (list.pop(0) is O(n) and the queue can be deep under load).
         self.queue: Deque[Request] = collections.deque()
+        self.max_queue = max_queue
+        self.rejected = 0  # requests shed at admission
         self._decode = jax.jit(self._decode_impl)
 
     # --- public API ---
 
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> bool:
+        """Enqueues ``req``; with ``max_queue`` set, a full queue SHEDS the
+        request instead of queueing unboundedly — ``req.rejected`` is set
+        and False returned (the explicit load-shedding outcome, same
+        contract as the densest engine's ``status='rejected'``)."""
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            req.rejected = True
+            self.rejected += 1
+            return False
         self.queue.append(req)
+        return True
 
     def step(self) -> List[Request]:
         """Admit + decode one token for all active slots; returns finished."""

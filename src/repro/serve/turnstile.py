@@ -36,6 +36,14 @@ class TurnstileDensityService:
     Counters: ``updates_applied`` / ``batches_applied`` mirror the
     sketch's, ``queries_served`` counts reads, ``queries_computed`` counts
     actual sampled peels (the difference is cache traffic).
+
+    Resilience (docs/resilience.md): with ``serve_stale=True`` (default)
+    a recompute that FAILS — sketch recovery exhausted its level
+    escalation, or an injected ``serve``-layer fault — serves the
+    last-good cached answer instead of raising, stamps ``last_error`` and
+    counts ``stale_results_served``.  The stale answer is real previously
+    computed data, never fabricated; with no cached answer yet the error
+    propagates (there is nothing true to serve).
     """
 
     def __init__(
@@ -45,6 +53,7 @@ class TurnstileDensityService:
         *,
         solver: Optional[Solver] = None,
         cache_dir: Optional[str] = None,
+        serve_stale: bool = True,
         **driver_kw,
     ):
         if problem is None:
@@ -55,10 +64,14 @@ class TurnstileDensityService:
             n_nodes, problem, solver=solver, **driver_kw
         )
         self.solver = solver
+        self.serve_stale = bool(serve_stale)
         self._cached: Optional[DenseSubgraphResult] = None
         self._dirty = True  # an empty graph is still a valid first query
         self.queries_served = 0
         self.queries_computed = 0
+        self.queries_failed = 0
+        self.stale_results_served = 0
+        self.last_error: Optional[str] = None
 
     @property
     def n_nodes(self) -> int:
@@ -89,7 +102,17 @@ class TurnstileDensityService:
         update arrived since the last query)."""
         self.queries_served += 1
         if self._dirty or self._cached is None:
-            self._cached = self.driver.query()
+            try:
+                self._cached = self.driver.query()
+            except Exception as e:  # noqa: BLE001 — serve stale, never fake
+                self.queries_failed += 1
+                self.last_error = f"{type(e).__name__}: {e}"
+                if self.serve_stale and self._cached is not None:
+                    # Last-good answer; _dirty stays True so the next read
+                    # retries the recompute.
+                    self.stale_results_served += 1
+                    return self._cached
+                raise
             self.queries_computed += 1
             self._dirty = False
         return self._cached
@@ -99,11 +122,19 @@ class TurnstileDensityService:
         return float(self.result().best_density)
 
     def stats(self) -> Dict[str, Any]:
+        """Serving + sketch + solver counters in one dict, so degraded
+        operation (escalations, stale serves, disk-store failures) is
+        observable from the service alone."""
         return {
             "updates_applied": self.updates_applied,
             "batches_applied": self.batches_applied,
             "queries_served": self.queries_served,
             "queries_computed": self.queries_computed,
+            "queries_failed": self.queries_failed,
+            "stale_results_served": self.stale_results_served,
+            "last_error": self.last_error,
             "recovery_failures": self.driver.sketch.recovery_failures,
+            "recovery_escalations": self.driver.sketch.recovery_escalations,
             "update_trace_count": self.driver.sketch.trace_count,
+            "disk_store_errors": self.solver.disk_store_errors,
         }

@@ -1,0 +1,817 @@
+"""Chaos suite: deterministic fault injection + the deadline/retry/degrade
+layer (repro/faults.py, serve/resilience.py and the instrumented sites).
+
+Contracts under test:
+
+  * **FaultPlan determinism** — fail-nth schedules, seeded fail-prob
+    storms (bit-reproducible across plans with the same seed), latency
+    injection through an injectable sleep, hit/failure accounting;
+  * **no-plan bit-identity** — with no plan installed (or an EMPTY plan),
+    every instrumented path produces outputs identical to the
+    uninstrumented code: serving answers, streaming runs, progcache
+    round-trips (the PR's zero-cost acceptance criterion);
+  * **streaming retry budget** — a deterministic chunk failure surfaces
+    its REAL error after exactly one retry; a transient failure recovers
+    bit-identically; a speculative duplicate does NOT consume the retry
+    budget — all driven through FaultPlan, no monkeypatching;
+  * **checkpoint fail-open** — a corrupt/truncated checkpoint warns,
+    quarantines with one atomic rename, and resumes fresh;
+  * **spill publish** — a failed publish aborts the rung (no manifest,
+    nothing for resume to adopt);
+  * **progcache** — store/load faults stay fail-open; first store failure
+    logs once, later ones only count;
+  * **turnstile** — an injected decode failure escalates a level and the
+    recovered sample still contains only true edges (never fabricated);
+    the density service serves the last-good answer on recompute failure;
+  * **serving resilience** — group-failure isolation (with or without a
+    ResilienceConfig), bounded retry with deterministic backoff, the
+    degradation ladder (radius -> turnstile -> last-good -> failed),
+    bounded-queue load shedding, per-bucket circuit breaker, deadline
+    budgets.
+"""
+
+import logging
+import os
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.core import Problem, Solver
+from repro.core.streaming import StreamingDensest, chunked_from_arrays
+from repro.core.turnstile import TurnstileSketch
+from repro.faults import FaultPlan, FaultRule, InjectedFault
+from repro.graph.edgelist import EdgeSpillWriter, open_edge_spill
+from repro.graph.generators import (
+    chung_lu_power_law,
+    erdos_renyi,
+    planted_dense_subgraph,
+)
+from repro.serve.densest import DensestQueryEngine
+from repro.serve.resilience import CircuitBreaker, ResilienceConfig
+from repro.serve.turnstile import TurnstileDensityService
+
+EPS = 0.5
+PROB = Problem.undirected(eps=EPS, compaction="off")
+SITE_CHUNK = "streaming.chunk"
+
+
+@pytest.fixture(autouse=True)
+def _no_plan_leaks():
+    """A leaked process-global plan would poison every later test."""
+    assert faults.installed() is None
+    yield
+    faults.uninstall()
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _edges_np(edges):
+    mask = np.asarray(edges.mask)
+    return (
+        np.asarray(edges.src)[mask],
+        np.asarray(edges.dst)[mask],
+        np.asarray(edges.weight)[mask],
+    )
+
+
+@pytest.fixture(scope="module")
+def graph():
+    edges = erdos_renyi(300, avg_deg=8, seed=3)
+    return edges, _edges_np(edges)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_fail_nth_is_deterministic():
+    plan = FaultPlan().fail_nth("s", 1, 3, key="k")
+    outcomes = []
+    for _ in range(4):
+        try:
+            plan.fire("s", "k")
+            outcomes.append("ok")
+        except InjectedFault as e:
+            outcomes.append(f"fail@{e.hit}")
+    assert outcomes == ["fail@1", "ok", "fail@3", "ok"]
+    assert plan.hits_at("s", "k") == 4
+    assert plan.failures_at("s", "k") == 2
+    # Other keys are independent streams (their own 1-based hit counts).
+    plan.fire("s", "other")
+    assert plan.hits_at("s", "other") == 1
+    assert plan.hits_at("s") == 5  # aggregate over keys
+
+
+def test_fail_prob_storm_is_seed_reproducible():
+    def storm(seed):
+        plan = FaultPlan(seed=seed).fail_prob("s", 0.3)
+        pat = []
+        for i in range(300):
+            try:
+                plan.fire("s", i % 7)
+                pat.append(0)
+            except InjectedFault:
+                pat.append(1)
+        return pat, plan.failures_at("s")
+
+    a, na = storm(11)
+    b, nb = storm(11)
+    c, nc = storm(12)
+    assert a == b and na == nb  # same seed: bit-identical storm
+    assert a != c  # different seed: different storm
+    assert 0.15 < na / 300 < 0.45  # roughly the requested rate
+
+
+def test_fail_prob_max_fails_budget():
+    plan = FaultPlan().fail_prob("s", 1.0, max_fails=2)
+    fails = 0
+    for _ in range(5):
+        try:
+            plan.fire("s")
+        except InjectedFault:
+            fails += 1
+    assert fails == 2 and plan.failures_at("s") == 2
+
+
+def test_latency_injection_uses_sleep_fn():
+    slept = []
+    plan = FaultPlan(sleep_fn=slept.append).latency(
+        "s", 0.25, key="k", nth=(2,)
+    )
+    plan.fire("s", "k")
+    assert slept == []  # nth=(2,): hit 1 does not sleep
+    plan.fire("s", "k")
+    assert slept == [0.25]
+    plan.fire("s", "other")  # keyed rule: other keys unaffected
+    assert slept == [0.25]
+
+
+def test_no_plan_fire_is_noop_and_context_restores():
+    faults.fire("anything", key=123)  # no plan installed: pure no-op
+    plan = FaultPlan().fail_nth("s", 1)
+    with faults.active(plan):
+        assert faults.installed() is plan
+        with pytest.raises(InjectedFault):
+            faults.fire("s")
+    assert faults.installed() is None
+    faults.install(plan)
+    assert faults.installed() is plan
+    faults.uninstall()
+    assert faults.installed() is None
+    with pytest.raises(TypeError):
+        faults.install("not a plan")
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError, match="fail_prob"):
+        FaultRule(site="s", fail_prob=1.5)
+    with pytest.raises(ValueError, match="latency_s"):
+        FaultRule(site="s", latency_s=-1.0)
+    with pytest.raises(ValueError, match="max_fails"):
+        FaultRule(site="s", max_fails=-1)
+
+
+# ---------------------------------------------------------------------------
+# No-plan / empty-plan bit-identity (the zero-cost acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_serving_bit_identical_without_plan_and_with_empty_plan():
+    g = chung_lu_power_law(400, exponent=2.0, avg_deg=6.0, seed=0)
+    seeds = [1, 7, 19, 42, 97]
+
+    def answers(resilience, plan):
+        eng = DensestQueryEngine(
+            g, PROB, radius=2, max_wait_ms=0.0, resilience=resilience
+        )
+        if plan is None:
+            return eng.query_many(seeds)
+        with faults.active(plan):
+            return eng.query_many(seeds)
+
+    ref = answers(None, None)
+    with_cfg = answers(ResilienceConfig(max_retries=2, deadline_ms=50.0), None)
+    with_empty = answers(None, FaultPlan())
+    for res in (with_cfg, with_empty):
+        for a, b in zip(ref, res):
+            assert b.status == "ok" and b.fallback is None
+            assert b.error is None and b.attempts == 1
+            assert a.density == b.density  # float-equal, not approx
+            np.testing.assert_array_equal(a.nodes, b.nodes)
+            assert a.bucket == b.bucket
+
+
+def test_streaming_bit_identical_with_empty_plan(graph):
+    edges, (src, dst, w) = graph
+    stream = chunked_from_arrays(src, dst, w, chunk=97)
+    ref = StreamingDensest(stream, n_nodes=edges.n_nodes, n_workers=3).run(
+        max_passes=6, resume=False
+    )
+    with faults.active(FaultPlan()):
+        st = StreamingDensest(stream, n_nodes=edges.n_nodes, n_workers=3).run(
+            max_passes=6, resume=False
+        )
+    assert st.best_rho == ref.best_rho
+    np.testing.assert_array_equal(st.best_alive, ref.best_alive)
+    assert st.history == ref.history
+
+
+# ---------------------------------------------------------------------------
+# Streaming retry budget (driven through FaultPlan, no monkeypatching)
+# ---------------------------------------------------------------------------
+
+
+def test_deterministic_chunk_failure_surfaces_after_exactly_one_retry(graph):
+    edges, (src, dst, w) = graph
+    stream = chunked_from_arrays(src, dst, w, chunk=97)
+    plan = FaultPlan().fail_nth(SITE_CHUNK, 1, 2, key=2)  # attempt AND retry
+    drv = StreamingDensest(stream, n_nodes=edges.n_nodes, n_workers=3)
+    with faults.active(plan):
+        with pytest.raises(InjectedFault) as exc:
+            drv.run(max_passes=2, resume=False)
+    assert exc.value.key == 2  # the REAL error of the failing chunk
+    # Exactly one failure-triggered re-issue: attempt (hit 1) + retry
+    # (hit 2), then the error surfaces — no retry loop.
+    assert plan.hits_at(SITE_CHUNK, 2) == 2
+    assert drv.speculative_reissues == 1
+
+
+def test_transient_chunk_failure_recovers_bit_identically(graph):
+    edges, (src, dst, w) = graph
+    stream = chunked_from_arrays(src, dst, w, chunk=97)
+    ref = StreamingDensest(stream, n_nodes=edges.n_nodes, n_workers=3).run(
+        max_passes=4, resume=False
+    )
+    plan = FaultPlan().fail_nth(SITE_CHUNK, 1, key=2)  # first attempt only
+    drv = StreamingDensest(stream, n_nodes=edges.n_nodes, n_workers=3)
+    with faults.active(plan):
+        st = drv.run(max_passes=4, resume=False)
+    assert plan.hits_at(SITE_CHUNK, 2) >= 2  # attempt + its retry
+    assert st.best_rho == ref.best_rho
+    np.testing.assert_array_equal(st.best_alive, ref.best_alive)
+    assert st.history == ref.history
+
+
+def test_speculative_duplicate_does_not_consume_retry_budget(graph):
+    """A chunk whose first attempt straggles (injected latency) gets a
+    speculative duplicate.  The duplicate FAILS while the original is
+    still in flight — first-success-wins must IGNORE that failure (no
+    retry budget spent), so when the original then also fails, the one
+    real retry still remains and the pass completes."""
+    edges, (src, dst, w) = graph
+    stream = chunked_from_arrays(src, dst, w, chunk=97)
+    # Warm the jitted chunk kernel so real work is fast vs the 1s sleep.
+    # Single pass: each extra pass re-streams the chunks and fires its own
+    # attempt (plus tail-duplicate) hits, which would blur the count below.
+    ref = StreamingDensest(stream, n_nodes=edges.n_nodes, n_workers=3).run(
+        max_passes=1, resume=False
+    )
+    k = 2
+    plan = (
+        FaultPlan()
+        .latency(SITE_CHUNK, 1.0, key=k, nth=(1,))  # attempt 1 straggles
+        .fail_nth(SITE_CHUNK, 1, 2, key=k)  # attempt 1 AND duplicate fail
+    )
+    drv = StreamingDensest(
+        stream,
+        n_nodes=edges.n_nodes,
+        n_workers=3,
+        speculative=True,
+        speculate_tail_frac=1.0,  # duplicate the whole straggler tail
+        prefetch=64,  # the whole stream fits one window
+    )
+    with faults.active(plan):
+        st = drv.run(max_passes=1, resume=False)
+    # hit 1: straggling first attempt (fails at ~1s); hit 2: speculative
+    # duplicate (fails fast, original still live -> ignored, budget
+    # intact); hit 3: the one real retry (succeeds).
+    assert plan.hits_at(SITE_CHUNK, k) == 3
+    assert plan.failures_at(SITE_CHUNK, k) == 2
+    assert st.best_rho == ref.best_rho
+    np.testing.assert_array_equal(st.best_alive, ref.best_alive)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint fail-open (quarantine + fresh start)
+# ---------------------------------------------------------------------------
+
+
+def _ckpt_run(graph, tmp_path, **kw):
+    edges, (src, dst, w) = graph
+    return StreamingDensest(
+        chunked_from_arrays(src, dst, w, chunk=128),
+        n_nodes=edges.n_nodes,
+        checkpoint_dir=str(tmp_path),
+        **kw,
+    )
+
+
+def test_truncated_checkpoint_quarantined_and_run_starts_fresh(
+    graph, tmp_path
+):
+    ref = _ckpt_run(graph, tmp_path).run(max_passes=3, resume=False)
+    path = os.path.join(str(tmp_path), "stream_state.npz")
+    blob = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(blob[: len(blob) // 2])  # torn copy / bad disk
+    drv = _ckpt_run(graph, tmp_path)
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        st = drv.run(max_passes=3, resume=True)
+    assert os.path.exists(path + ".corrupt")  # one atomic rename
+    # The fresh run reproduces the from-scratch result exactly.
+    assert st.best_rho == ref.best_rho
+    np.testing.assert_array_equal(st.best_alive, ref.best_alive)
+    assert st.history == ref.history
+
+
+def test_injected_checkpoint_load_fault_fails_open(graph, tmp_path):
+    _ckpt_run(graph, tmp_path).run(max_passes=2, resume=False)
+    path = os.path.join(str(tmp_path), "stream_state.npz")
+    plan = FaultPlan().fail_nth("streaming.checkpoint_load", 1)
+    with faults.active(plan):
+        with pytest.warns(RuntimeWarning, match="quarantined"):
+            st = _ckpt_run(graph, tmp_path).run(max_passes=2, resume=True)
+    assert plan.hits_at("streaming.checkpoint_load") == 1
+    assert os.path.exists(path + ".corrupt")  # the (healthy) file, shelved
+    assert st.pass_idx <= 2  # ran fresh to completion
+
+
+def test_injected_checkpoint_save_fault_surfaces(graph, tmp_path):
+    plan = FaultPlan().fail_nth("streaming.checkpoint_save", 1)
+    drv = _ckpt_run(graph, tmp_path)
+    with faults.active(plan):
+        with pytest.raises(InjectedFault):
+            drv.run(max_passes=2, resume=False)
+
+
+# ---------------------------------------------------------------------------
+# Spill publish failure -> aborted rung
+# ---------------------------------------------------------------------------
+
+
+def test_spill_publish_fault_aborts_and_leaves_no_manifest(tmp_path):
+    spill_dir = str(tmp_path / "rung_0000")
+    w = EdgeSpillWriter(spill_dir, np.float32)
+    w.append(
+        np.asarray([0, 1], np.int32),
+        np.asarray([1, 2], np.int32),
+        np.asarray([1.0, 1.0], np.float32),
+    )
+    plan = FaultPlan().fail_nth("edgelist.spill_publish", 1)
+    with faults.active(plan):
+        with pytest.raises(InjectedFault):
+            w.finalize(caps=[2], rung=0)
+    w.abort()  # the streaming caller's failure path
+    assert not os.path.exists(spill_dir)  # nothing for resume to adopt
+    assert open_edge_spill(spill_dir) is None
+
+
+def test_streaming_ladder_aborts_partial_rung_on_publish_fault(tmp_path):
+    edges, _ = planted_dense_subgraph(
+        800, avg_deg=6, k=40, p_dense=0.8, seed=0
+    )
+    src, dst, w = _edges_np(edges)
+    spill = tmp_path / "spill"
+    drv = StreamingDensest(
+        chunked_from_arrays(src, dst, w, chunk=512),
+        n_nodes=edges.n_nodes,
+        eps=0.2,
+        compaction="geometric",
+        spill_dir=str(spill),
+    )
+    plan = FaultPlan().fail_nth("edgelist.spill_publish", 1)
+    with faults.active(plan):
+        with pytest.raises(InjectedFault):
+            drv.run(resume=False)
+    # The partial rung directory was dropped; no manifest anywhere.
+    if spill.is_dir():
+        for name in os.listdir(spill):
+            assert not os.path.exists(spill / name / "manifest.json")
+
+
+# ---------------------------------------------------------------------------
+# progcache faults: fail-open + log-once
+# ---------------------------------------------------------------------------
+
+
+def test_progcache_store_fault_counts_and_logs_once(tmp_path, caplog):
+    g1 = erdos_renyi(64, avg_deg=6, seed=0)
+    g2 = erdos_renyi(128, avg_deg=6, seed=1)
+    ref = Solver().solve(g1, PROB)
+    solver = Solver(cache_dir=str(tmp_path))
+    plan = FaultPlan().fail_prob("progcache.store", 1.0)
+    with caplog.at_level(logging.WARNING, logger="repro.progcache"):
+        with faults.active(plan):
+            res = solver.solve(g1, PROB)
+            solver.solve(g2, PROB)  # second failed store: counted, silent
+    assert float(res.best_density) == float(ref.best_density)  # fail-open
+    assert solver.disk_store_errors == 2
+    assert solver.stats()["disk_store_errors"] == 2
+    warned = [r for r in caplog.records if r.name == "repro.progcache"]
+    assert len(warned) == 1  # rate-limited: log once, count the rest
+    assert os.listdir(str(tmp_path)) == []  # nothing was published
+
+
+def test_progcache_load_fault_fails_open_to_recompile(tmp_path):
+    g = erdos_renyi(64, avg_deg=6, seed=0)
+    warm = Solver(cache_dir=str(tmp_path))
+    ref = warm.solve(g, PROB)
+    assert warm.disk_misses == 1  # published an entry
+    cold = Solver(cache_dir=str(tmp_path))
+    plan = FaultPlan().fail_prob("progcache.load", 1.0)
+    with faults.active(plan):
+        res = cold.solve(g, PROB)
+    assert cold.disk_hits == 0 and cold.disk_misses == 1  # load failed open
+    assert float(res.best_density) == float(ref.best_density)
+    # Without the plan the same entry loads fine (the entry is intact).
+    fresh = Solver(cache_dir=str(tmp_path))
+    fresh.solve(g, PROB)
+    assert fresh.disk_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# Turnstile: decode faults escalate, never fabricate; service serves stale
+# ---------------------------------------------------------------------------
+
+
+def _edge_keys(u, v, n):
+    lo = np.minimum(u, v).astype(np.int64)
+    hi = np.maximum(u, v).astype(np.int64)
+    return lo * n + hi
+
+
+def test_turnstile_decode_fault_escalates_and_never_fabricates():
+    g = chung_lu_power_law(400, seed=8)
+    m = int(np.asarray(g.mask).sum())
+    src = np.asarray(g.src)[:m].copy()
+    dst = np.asarray(g.dst)[:m].copy()
+    sk = TurnstileSketch(400, 1 << 11, seed=1)
+    sk.apply((src, dst))
+    ref_edges, ref_level, _ = sk.recover()
+    assert ref_level == 0  # sanity: normally exact at level 0
+    # key=0 pins the fault to level 0's decode; an unkeyed rule would be a
+    # wildcard and kill the FIRST attempt at EVERY level (hits count
+    # per-key), failing the whole escalation ladder.
+    plan = FaultPlan().fail_nth("turnstile.decode", 1, key=0)
+    with faults.active(plan):
+        edges, level, info = sk.recover()
+    assert level > 0 and info["first_level_tried"] == 0
+    assert sk.recovery_failures == 1
+    assert sk.recovery_escalations == 1
+    # The escalated sample holds ONLY true edges — never fabricated.
+    want = set(_edge_keys(src, dst, 400).tolist())
+    got = set(_edge_keys(edges[:, 0], edges[:, 1], 400).tolist())
+    assert got <= want and len(got) > 0
+
+
+def test_turnstile_service_serves_stale_on_recovery_failure():
+    rng = np.random.default_rng(0)
+    e1 = rng.integers(0, 300, size=(200, 2)).astype(np.int32)
+    e1 = e1[e1[:, 0] != e1[:, 1]]
+    svc = TurnstileDensityService(
+        300, Problem.undirected(stream_mode="turnstile", sample_edges=1 << 10)
+    )
+    svc.apply(insert_edges=e1)
+    d0 = svc.density()
+    e2 = np.asarray([[1, 2], [2, 3], [1, 3]], np.int32)
+    svc.apply(insert_edges=e2)  # marks the cached answer stale
+    plan = FaultPlan().fail_prob("turnstile.decode", 1.0)  # kill ALL levels
+    with faults.active(plan):
+        d1 = svc.density()  # recompute fails -> stale last-good served
+    assert d1 == d0
+    st = svc.stats()
+    assert st["stale_results_served"] == 1 and st["queries_failed"] == 1
+    assert "recovery failed" in st["last_error"]
+    assert st["recovery_escalations"] == svc.driver.sketch.recovery_escalations
+    assert "disk_store_errors" in st
+    # The dirty flag survived the failure: the next healthy read recomputes.
+    before = svc.queries_computed
+    d2 = svc.density()
+    assert svc.queries_computed == before + 1
+    assert np.isfinite(d2)
+
+
+def test_turnstile_service_serve_stale_off_raises():
+    svc = TurnstileDensityService(
+        100,
+        Problem.undirected(stream_mode="turnstile", sample_edges=1 << 8),
+        serve_stale=False,
+    )
+    svc.apply(insert_edges=np.asarray([[0, 1], [1, 2]], np.int32))
+    svc.density()
+    svc.apply(insert_edges=np.asarray([[2, 3]], np.int32))
+    with faults.active(FaultPlan().fail_prob("turnstile.decode", 1.0)):
+        with pytest.raises(RuntimeError):
+            svc.density()
+
+
+# ---------------------------------------------------------------------------
+# Serving: group isolation, retry, degradation ladder, shedding, breaker
+# ---------------------------------------------------------------------------
+
+
+def _serve_graph():
+    return chung_lu_power_law(500, exponent=2.0, avg_deg=6.0, seed=2)
+
+
+def _two_bucket_seeds(eng, want=3):
+    """Seeds split across two distinct bucket groups of ``eng``."""
+    by_key = {}
+    for s in range(eng.n_nodes):
+        padded, _ = eng.extract(s)
+        by_key.setdefault(
+            (padded.n_nodes, padded.n_edges_padded), []
+        ).append(s)
+        if (
+            len(by_key) >= 2
+            and sorted(len(v) for v in by_key.values())[-2] >= want
+        ):
+            big = sorted(by_key, key=lambda k: -len(by_key[k]))[:2]
+            if all(len(by_key[k]) >= want for k in big):
+                return {k: by_key[k][:want] for k in big}
+    raise AssertionError("graph has only one bucket shape")
+
+
+def test_group_failure_poisons_only_its_own_lanes_without_config():
+    g = _serve_graph()
+    # Small bucket floors: at the default 64/256 floors every radius-1
+    # ego-net of this graph pads into ONE bucket shape, and the test needs
+    # two distinct bucket groups in one flush.
+    eng = DensestQueryEngine(
+        g, PROB, radius=1, max_wait_ms=0.0, node_floor=8, edge_floor=32
+    )
+    groups = _two_bucket_seeds(eng)
+    (bad_key, bad_seeds), (ok_key, ok_seeds) = groups.items()
+    ref = DensestQueryEngine(
+        g, PROB, radius=1, max_wait_ms=0.0, node_floor=8, edge_floor=32
+    )
+    ref_by_seed = {r.seed: r for r in ref.query_many(ok_seeds)}
+    plan = FaultPlan().fail_nth("serve.solve", 1, key=bad_key)
+    with faults.active(plan):
+        out = eng.query_many(bad_seeds + ok_seeds)
+    by_seed = {r.seed: r for r in out}
+    assert len(out) == len(bad_seeds) + len(ok_seeds)  # nothing lost
+    for s in bad_seeds:  # the failed group: explicit per-lane errors
+        r = by_seed[s]
+        assert r.status == "failed" and not r.answered
+        assert "InjectedFault" in r.error
+        assert np.isnan(r.density) and r.size == 0 and r.attempts == 1
+    for s in ok_seeds:  # the sibling group: bit-identical answers
+        r = by_seed[s]
+        assert r.status == "ok"
+        assert r.density == ref_by_seed[s].density
+        np.testing.assert_array_equal(r.nodes, ref_by_seed[s].nodes)
+    assert eng.queries_failed == len(bad_seeds)
+
+
+def test_retry_recovers_with_deterministic_backoff():
+    g = _serve_graph()
+    slept = []
+    cfg = ResilienceConfig(max_retries=2, backoff_base_ms=4.0, jitter_seed=9)
+    eng = DensestQueryEngine(
+        g, PROB, radius=1, max_wait_ms=0.0,
+        resilience=cfg, sleep_fn=slept.append,
+    )
+    ref = DensestQueryEngine(g, PROB, radius=1, max_wait_ms=0.0)
+    seed = 5
+    padded, _ = eng.extract(seed)
+    gkey = (padded.n_nodes, padded.n_edges_padded)
+    plan = FaultPlan().fail_nth("serve.solve", 1, key=gkey)
+    with faults.active(plan):
+        res = eng.query(seed)
+    want = ref.query(seed)
+    assert res.status == "ok" and res.attempts == 2
+    assert res.density == want.density
+    np.testing.assert_array_equal(res.nodes, want.nodes)
+    assert eng.solve_retries == 1
+    # The backoff slept exactly the config's deterministic schedule.
+    assert slept == [cfg.backoff_s(1, key=gkey)]
+    step = cfg.backoff_base_ms / 1000.0
+    assert step * (1 - cfg.backoff_jitter) <= slept[0] <= step
+
+
+def test_degrade_to_smaller_radius():
+    g = _serve_graph()
+    cfg = ResilienceConfig(
+        max_retries=0, degrade_turnstile=False, degrade_last_good=False
+    )
+    eng = DensestQueryEngine(
+        g, PROB, radius=2, max_wait_ms=0.0, resilience=cfg
+    )
+    seed = 5
+    padded, _ = eng.extract(seed, 2)
+    gkey = (padded.n_nodes, padded.n_edges_padded)
+    plan = FaultPlan().fail_prob("serve.solve", 1.0, key=gkey)
+    with faults.active(plan):
+        res = eng.query(seed)
+    assert res.status == "degraded" and res.degraded and res.answered
+    assert res.fallback == "radius:1" and "InjectedFault" in res.error
+    # The degraded answer is REAL: identical to solving the radius-1
+    # ego-net directly.
+    small, nodes = eng.extract(seed, 1)
+    want = Solver().solve(small, PROB)
+    assert res.density == float(want.best_density)
+    alive = np.asarray(want.best_alive)
+    want_nodes = nodes[np.nonzero(alive)[0][np.nonzero(alive)[0] < len(nodes)]]
+    np.testing.assert_array_equal(res.nodes, want_nodes)
+    assert eng.queries_degraded == 1
+
+
+class _StubTurnstile:
+    """Duck-typed TurnstileDensityService: a pinned density reading."""
+
+    def __init__(self, n_nodes, rho):
+        self.n_nodes = n_nodes
+        self.rho = rho
+
+    def density(self):
+        return self.rho
+
+    def apply(self, *a, **kw):
+        return self
+
+
+def test_degrade_to_turnstile_density_then_last_good():
+    g = _serve_graph()
+    cfg = ResilienceConfig(max_retries=0, degrade_radius=False)
+    eng = DensestQueryEngine(
+        g, PROB, radius=1, max_wait_ms=0.0, resilience=cfg
+    )
+    eng.attach_turnstile(_StubTurnstile(g.n_nodes, rho=3.25))
+    seed = 5
+    good = eng.query(seed)  # healthy: also primes the last-good cache
+    assert good.status == "ok"
+    plan = FaultPlan().fail_prob("serve.solve", 1.0)  # every solve fails
+    with faults.active(plan):
+        res = eng.query(seed)
+    # last_good outranks nothing here: the ladder tries turnstile FIRST
+    # only when radius is disabled and turnstile is attached.
+    assert res.status == "degraded"
+    assert res.fallback == "turnstile_density"
+    assert res.density == 3.25 and res.size == 0
+    # Detach the sidecar: the same storm now lands on last_good.
+    eng._turnstile = None
+    with faults.active(plan):
+        res2 = eng.query(seed)
+    assert res2.status == "degraded" and res2.fallback == "last_good"
+    assert res2.density == good.density
+    np.testing.assert_array_equal(res2.nodes, good.nodes)
+    assert res2.qid != good.qid and "InjectedFault" in res2.error
+
+
+def test_failed_when_ladder_exhausted_but_flush_survives():
+    g = _serve_graph()
+    cfg = ResilienceConfig(max_retries=0)  # radius=1: no smaller radius
+    eng = DensestQueryEngine(
+        g, PROB, radius=1, max_wait_ms=0.0, resilience=cfg
+    )
+    plan = FaultPlan().fail_prob("serve.solve", 1.0)
+    with faults.active(plan):
+        res = eng.query(5)  # flush() returns; nothing raises
+    assert res.status == "failed" and not res.answered
+    assert np.isnan(res.density) and "InjectedFault" in res.error
+    # A later healthy query on the same engine works (queue not poisoned).
+    ok = eng.query(5)
+    assert ok.status == "ok"
+
+
+def test_bounded_queue_sheds_with_explicit_rejected_outcome():
+    g = _serve_graph()
+    cfg = ResilienceConfig(max_queue=2)
+    eng = DensestQueryEngine(
+        g, PROB, radius=1, max_wait_ms=0.0, resilience=cfg
+    )
+    qids = [eng.submit(s) for s in (1, 2, 3, 4)]
+    assert eng.pending() == 2  # two admitted, two shed
+    out = eng.flush()
+    assert sorted(r.qid for r in out) == sorted(qids)  # nobody vanishes
+    by_qid = {r.qid: r for r in out}
+    statuses = [by_qid[q].status for q in qids]
+    assert statuses == ["ok", "ok", "rejected", "rejected"]
+    for q in qids[2:]:
+        r = by_qid[q]
+        assert r.attempts == 0 and "queue full" in r.error
+        assert not r.answered
+    assert eng.queries_rejected == 2
+
+
+def test_circuit_breaker_opens_cools_down_and_probes():
+    clk = _Clock()
+    g = _serve_graph()
+    cfg = ResilienceConfig(
+        max_retries=0, breaker_threshold=2, breaker_cooldown_s=30.0
+    )
+    eng = DensestQueryEngine(
+        g, PROB, radius=1, max_wait_ms=0.0, resilience=cfg, time_fn=clk
+    )
+    seed = 5
+    padded, _ = eng.extract(seed)
+    gkey = (padded.n_nodes, padded.n_edges_padded)
+    plan = FaultPlan().fail_prob("serve.solve", 1.0, key=gkey)
+    with faults.active(plan):
+        eng.query(seed)
+        eng.query(seed)  # 2 consecutive failures: circuit opens
+        assert eng._breaker.state(gkey) == "open"
+        hits = plan.hits_at("serve.solve", gkey)
+        r = eng.query(seed)  # open: no real attempt reaches the solver
+        assert plan.hits_at("serve.solve", gkey) == hits
+        assert r.status == "failed" and "CircuitOpen" in r.error
+        assert r.attempts == 0
+        assert eng.breaker_open_skips == 1
+        clk.t += 31.0  # cooldown elapses: one half-open probe goes through
+        eng.query(seed)
+        assert plan.hits_at("serve.solve", gkey) == hits + 1
+        assert eng._breaker.state(gkey) == "open"  # probe failed: re-open
+    clk.t += 31.0
+    ok = eng.query(seed)  # healthy probe closes the circuit
+    assert ok.status == "ok"
+    assert eng._breaker.state(gkey) == "closed"
+    assert eng._breaker.opened >= 2
+
+
+def test_deadline_budget_stops_retries():
+    clk = _Clock()
+    g = _serve_graph()
+    cfg = ResilienceConfig(
+        max_retries=5, deadline_ms=5.0, backoff_base_ms=10.0
+    )
+
+    def sleeping_clock(s):
+        clk.t += s  # backoff sleeps advance the injected clock
+
+    eng = DensestQueryEngine(
+        g, PROB, radius=1, max_wait_ms=0.0,
+        resilience=cfg, time_fn=clk, sleep_fn=sleeping_clock,
+    )
+    plan = FaultPlan().fail_prob("serve.solve", 1.0)
+    with faults.active(plan):
+        res = eng.query(5)
+    # Attempt 1 fails inside budget -> one backoff (>= 5ms) -> attempt 2
+    # fails past the deadline -> no further retries, straight to the
+    # ladder (exhausted here) — NOT 5 retries.
+    assert res.attempts == 2
+    assert eng.deadline_stops == 1 and eng.solve_retries == 1
+    assert res.status == "failed"
+
+
+def test_circuit_breaker_unit_semantics():
+    clk = _Clock()
+    br = CircuitBreaker(threshold=2, cooldown_s=10.0, time_fn=clk)
+    assert br.state("k") == "closed" and br.allow("k")
+    br.record_failure("k")
+    assert br.state("k") == "closed"  # below threshold
+    br.record_failure("k")
+    assert br.state("k") == "open" and not br.allow("k")
+    clk.t += 10.0
+    assert br.state("k") == "half_open" and br.allow("k")
+    br.record_failure("k")  # failed probe: re-opens with fresh cooldown
+    assert br.state("k") == "open" and br.opened == 2
+    clk.t += 10.0
+    br.record_success("k")
+    assert br.state("k") == "closed" and br.opened == 2
+    assert br.state("other") == "closed"  # keys are independent
+    with pytest.raises(ValueError):
+        CircuitBreaker(threshold=0, cooldown_s=1.0)
+
+
+def test_resilience_config_validation_and_backoff():
+    with pytest.raises(ValueError, match="deadline_ms"):
+        ResilienceConfig(deadline_ms=0.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        ResilienceConfig(max_retries=-1)
+    with pytest.raises(ValueError, match="backoff_mult"):
+        ResilienceConfig(backoff_mult=0.5)
+    with pytest.raises(ValueError, match="max_queue"):
+        ResilienceConfig(max_queue=0)
+    cfg = ResilienceConfig(backoff_base_ms=2.0, backoff_mult=3.0)
+    with pytest.raises(ValueError):
+        cfg.backoff_s(0)
+    # Deterministic: same (retry, key) -> same wait; exponential envelope.
+    assert cfg.backoff_s(1, "k") == cfg.backoff_s(1, "k")
+    for retry in (1, 2, 3):
+        step = 2.0 * 3.0 ** (retry - 1) / 1000.0
+        assert step * 0.5 <= cfg.backoff_s(retry, "k") <= step
+
+
+def test_serve_engine_bounded_queue_sheds():
+    """ServeEngine shares the explicit-shed admission contract (unit-level:
+    the queue logic needs no model weights)."""
+    from repro.serve.engine import Request, ServeEngine
+
+    eng = ServeEngine.__new__(ServeEngine)
+    eng.queue = __import__("collections").deque()
+    eng.max_queue = 2
+    eng.rejected = 0
+    reqs = [Request(rid=i, prompt=np.zeros(2, np.int32)) for i in range(4)]
+    outcomes = [eng.submit(r) for r in reqs]
+    assert outcomes == [True, True, False, False]
+    assert eng.rejected == 2 and len(eng.queue) == 2
+    assert [r.rejected for r in reqs] == [False, False, True, True]
