@@ -13,8 +13,6 @@ import argparse
 import os
 import time
 
-import numpy as np
-
 import jax
 
 from repro.core.countsketch import SketchBackend, make_sketch_params

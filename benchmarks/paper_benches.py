@@ -13,7 +13,6 @@ CPU-tractable scales with the same shapes as the paper's plots.
 
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Any, Dict, List
 

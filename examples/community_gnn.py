@@ -11,7 +11,6 @@ feeding the framework's training stack end-to-end.
    resume path.
 """
 
-import os
 import time
 
 import jax
@@ -19,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import densest_subgraph_sets
-from repro.graph.edgelist import EdgeList, from_numpy
+from repro.graph.edgelist import from_numpy
 from repro.graph.generators import planted_partition
 from repro.graph.sampler import CSRGraph, LayeredSampler
 
@@ -64,7 +63,6 @@ def main():
     import dataclasses
 
     from repro.configs import get_arch
-    from repro.data.pipeline import SyntheticStream
     from repro.optim import AdamWConfig, apply_updates, init_state
     from repro.train.step import init_model_params, make_loss_fn, specialize_gnn_config
     from repro.train.trainer import Trainer, TrainerConfig

@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Invariant-linter front door: runs repro.analysis over the library tree.
+
+Usage (from the repo root)::
+
+    PYTHONPATH=src python scripts/analyze.py              # lint src/repro
+    PYTHONPATH=src python scripts/analyze.py --strict     # CI gate
+    PYTHONPATH=src python scripts/analyze.py --list-rules
+    PYTHONPATH=src python scripts/analyze.py path/to/file.py   # fixture mode
+
+Paths given explicitly as FILES are analyzed unscoped — every rule runs
+regardless of its path scope (how the fixture corpus trips rules that
+normally apply only inside src/repro).  Directories are walked scoped.
+
+Exit status: 0 when clean; 1 when any finding (``--strict``) or any
+error-severity finding (default) survives suppression.  No jax import
+anywhere on this path — the gate runs in a bare CPython.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analysis import (  # noqa: E402  (path bootstrap above)
+    Project,
+    all_rules,
+    analyze_paths,
+    render_finding,
+)
+
+_DEFAULT_TARGETS = ("src/repro",)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="analyze.py", description="repro invariant linter"
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help=(
+            "files (analyzed unscoped: all rules) and/or directories "
+            "(walked scoped); default: src/repro"
+        ),
+    )
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="exit 1 on ANY finding, warnings included (the CI gate)",
+    )
+    ap.add_argument(
+        "--list-rules",
+        action="store_true",
+        help="print every rule id + summary and exit",
+    )
+    ap.add_argument(
+        "--root",
+        default=_ROOT,
+        help="repo root anchoring relative paths (default: this repo)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, summary in all_rules().items():
+            print(f"{rid:20s} {summary}")
+        return 0
+
+    project = Project.load(args.root if args.root != _ROOT else None)
+    targets = args.paths or [os.path.join(args.root, t) for t in _DEFAULT_TARGETS]
+
+    findings = []
+    for t in targets:
+        ap_t = os.path.abspath(t)
+        scoped = os.path.isdir(ap_t)
+        findings.extend(
+            analyze_paths([ap_t], root=args.root, project=project, scoped=scoped)
+        )
+
+    for f in findings:
+        print(render_finding(f))
+    gating = [
+        f for f in findings if args.strict or f.severity == "error"
+    ]
+    n = len(findings)
+    print(
+        f"analyze: {n} finding{'s' if n != 1 else ''}"
+        + (f" ({len(gating)} gating)" if n else "")
+    )
+    return 1 if gating else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

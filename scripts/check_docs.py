@@ -1,21 +1,27 @@
 """Documentation checks: keep README.md and docs/ honest.
 
-Two checks (CI runs both; the link check also runs in tier-1 via
-tests/test_docs.py):
+Three checks (CI runs all; the link + rule-table checks also run in
+tier-1 via tests/test_docs.py):
 
 1. **Link check** (``--links-only``): every repo path referenced from
    README.md and docs/*.md (``src/...``, ``tests/...``, markdown link
    targets, and dotted ``repro.*`` module names) must exist.  Catches the
    classic rot where a doc keeps pointing at a module a refactor moved.
 
-2. **README snippet smoke**: the first ```python fenced block of README.md
+2. **Rule-table sync** (runs with the link check; jax-free): every rule
+   id in docs/analysis.md's rule table exists in the ``repro.analysis``
+   registry, and every registered rule (meta rules included) has a row —
+   a checker added without documentation, or a stale documented rule,
+   fails here.
+
+3. **README snippet smoke**: the first ```python fenced block of README.md
    (the 30-second quickstart) is extracted and executed VERBATIM in a
    subprocess, so the front-door example on the landing page can never
    silently break.
 
 Run from the repo root::
 
-    PYTHONPATH=src python scripts/check_docs.py          # both checks
+    PYTHONPATH=src python scripts/check_docs.py          # all checks
     python scripts/check_docs.py --links-only            # fast, no jax
 """
 
@@ -99,6 +105,35 @@ def check_links() -> list:
     return errors
 
 
+def check_rule_table() -> list:
+    """docs/analysis.md's rule table <-> the repro.analysis registry, both
+    directions.  repro.analysis is deliberately jax-free, so this check
+    runs everywhere the link check does."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.analysis import all_rules
+
+    doc = os.path.join(REPO, "docs", "analysis.md")
+    if not os.path.isfile(doc):
+        return ["docs/analysis.md is missing (rule table lives there)"]
+    documented = set()
+    for line in open(doc):
+        m = re.match(r"\|\s*`([\w-]+)`\s*\|", line)
+        if m:
+            documented.add(m.group(1))
+    registered = set(all_rules())
+    errors = []
+    for rid in sorted(registered - documented):
+        errors.append(
+            f"docs/analysis.md: registered rule {rid!r} has no table row"
+        )
+    for rid in sorted(documented - registered):
+        errors.append(
+            f"docs/analysis.md: documented rule {rid!r} is not in the "
+            "repro.analysis registry"
+        )
+    return errors
+
+
 def extract_readme_snippet() -> str:
     text = open(os.path.join(REPO, "README.md")).read()
     m = re.search(r"```python\n(.*?)```", text, re.DOTALL)
@@ -133,7 +168,11 @@ def main(argv=None) -> int:
         print(f"LINK ERROR: {e}", file=sys.stderr)
     n_docs = len(_doc_files())
     print(f"link check: {n_docs} docs scanned, {len(errors)} errors")
-    if errors:
+    rule_errors = check_rule_table()
+    for e in rule_errors:
+        print(f"RULE TABLE ERROR: {e}", file=sys.stderr)
+    print(f"rule-table sync: {len(rule_errors)} errors")
+    if errors or rule_errors:
         return 1
     if args.links_only:
         return 0

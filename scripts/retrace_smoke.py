@@ -1,0 +1,121 @@
+"""Retrace-budget smoke: the README quickstart shape never retraces twice.
+
+The Solver's whole point (see docs/compaction.md and the cache-key rule in
+docs/analysis.md) is that same-shape requests hit the in-memory program
+cache: ``trace_count`` grows only on a genuine cache miss — one trace per
+(problem key, pow2 rung bucket) — and repeat solves, same-bucket graphs,
+and repeat sweeps retrace **nothing**.  This smoke pins those counts for
+the README-quickstart-shaped workload, so a change that silently widens a
+cache key (or reads a key-exempt field inside a builder) fails CI with the
+counter diff instead of shipping a 10x compile-time regression.
+
+Run from the repo root (CI runs it next to the tier-1 suite)::
+
+    PYTHONPATH=src python scripts/retrace_smoke.py
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import Problem, Solver  # noqa: E402
+from repro.graph.generators import planted_dense_subgraph  # noqa: E402
+
+
+def check(label: str, stats: dict, expect: dict) -> list:
+    errors = []
+    for key, want in expect.items():
+        got = stats[key]
+        if got != want:
+            errors.append(f"{label}: {key}={got}, pinned {want}")
+    # The structural invariant behind every pin: a trace happens only on
+    # a program-cache miss, never on a hit.
+    if stats["trace_count"] != stats["cache_misses"]:
+        errors.append(
+            f"{label}: trace_count={stats['trace_count']} != "
+            f"cache_misses={stats['cache_misses']} — a cache hit retraced"
+        )
+    status = "ok" if not errors else "FAIL"
+    print(
+        f"{status:>4}  {label}: misses={stats['cache_misses']} "
+        f"hits={stats['cache_hits']} traces={stats['trace_count']}"
+    )
+    return errors
+
+
+def main() -> int:
+    solver = Solver()  # fresh counters; no persistent tier
+    errors = []
+
+    edges, _ = planted_dense_subgraph(
+        n=2000, avg_deg=4, k=60, p_dense=0.6, seed=7
+    )
+    prob = Problem.undirected(eps=0.5)
+
+    # 1. Cold solve: the compaction ladder compiles exactly TWO programs —
+    #    the ingest rung at the graph's own (n, E) shape, plus one compacted
+    #    rung at the pow2 bucket (256 nodes / 2048 edges) the survivors
+    #    shrink into.  (Pins assume the quickstart graph: one ladder step.)
+    solver.solve(edges, prob)
+    errors += check(
+        "cold solve", solver.stats(),
+        {"cache_misses": 2, "trace_count": 2, "cache_hits": 0,
+         "cached_programs": 2},
+    )
+
+    # 2. Same graph + problem again: every rung lookup hits, ZERO traces.
+    solver.solve(edges, prob)
+    errors += check(
+        "repeat solve", solver.stats(),
+        {"cache_misses": 2, "trace_count": 2, "cache_hits": 2,
+         "cached_programs": 2},
+    )
+
+    # 3. A different graph of the same shape class (same n, ~same m,
+    #    different seed): the ingest rung keys on the exact edge-array
+    #    shape, so a different m is ONE honest miss — but the compacted
+    #    pow2 rung is shared across graphs and must hit.
+    edges2, _ = planted_dense_subgraph(
+        n=2000, avg_deg=4, k=60, p_dense=0.6, seed=8
+    )
+    solver.solve(edges2, prob)
+    errors += check(
+        "same-bucket rung", solver.stats(),
+        {"cache_misses": 3, "trace_count": 3, "cache_hits": 3,
+         "cached_programs": 3},
+    )
+
+    # 4. The README eps sweep: one new vmapped program for the batch shape.
+    solver.solve_batch(
+        edges, Problem.undirected(max_passes=64), eps=[0.1, 0.5, 1.0]
+    )
+    errors += check(
+        "eps sweep", solver.stats(),
+        {"cache_misses": 4, "trace_count": 4, "cache_hits": 3,
+         "cached_programs": 4},
+    )
+
+    # 5. Sweep again: the batched program is cached too.
+    solver.solve_batch(
+        edges, Problem.undirected(max_passes=64), eps=[0.1, 0.5, 1.0]
+    )
+    errors += check(
+        "repeat sweep", solver.stats(),
+        {"cache_misses": 4, "trace_count": 4, "cache_hits": 4,
+         "cached_programs": 4},
+    )
+
+    if errors:
+        print("\nretrace smoke FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print("retrace smoke: all counters at pinned values")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

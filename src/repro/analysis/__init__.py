@@ -1,0 +1,62 @@
+"""repro.analysis — the AST-based invariant linter for this repo.
+
+Eight PRs of growth left the runtime's correctness resting on
+written-down-but-unenforced contracts: the removal threshold exists only
+in ``engine.removal_threshold``, persistent artifacts are published only
+through ``ioutil.atomic_write_file``, every failure-prone IO site threads
+a ``faults.fire()`` hook, cache-key-exempt ``Problem`` fields never leak
+into traced programs, traced code never round-trips through the host, and
+pow2 floors/capacities live on one constants surface.  Each rule here
+encodes one of those contracts as a mechanical AST check, so the machine —
+not the reviewer — holds the line (docs/analysis.md has the rule table and
+the CHANGES.md history each rule came from).
+
+Front door::
+
+    PYTHONPATH=src python scripts/analyze.py [--strict] [paths...]
+
+or programmatically::
+
+    from repro.analysis import analyze_paths
+    findings = analyze_paths(["src/repro"], root=REPO)
+
+Inline suppressions (`# repro: allow(<rule>) <justification>`) are parsed
+per file; a suppression without a justification, naming an unknown rule,
+or matching no finding is itself a finding (the suppressions are linted
+too).  This package is deliberately jax-free — pure ``ast``/stdlib — so
+the gating CI job and ``scripts/check_docs.py`` can import it without the
+accelerator stack.
+"""
+
+from repro.analysis.core import (
+    META_RULES,
+    Finding,
+    Rule,
+    RULES,
+    SourceFile,
+    Suppression,
+    all_rules,
+    analyze_file,
+    analyze_paths,
+    register,
+    render_finding,
+)
+from repro.analysis.project import Project
+
+# Importing the rules package registers every checker.
+from repro.analysis import rules as _rules  # noqa: F401  (registration side effect)
+
+__all__ = [
+    "META_RULES",
+    "RULES",
+    "Finding",
+    "Project",
+    "Rule",
+    "SourceFile",
+    "Suppression",
+    "all_rules",
+    "analyze_file",
+    "analyze_paths",
+    "register",
+    "render_finding",
+]

@@ -1,0 +1,155 @@
+"""Static views of the repo's contract surfaces.
+
+The rules need three facts about THIS repo: the registered fault sites
+(``faults.KNOWN_SITES``), the cache-key classification of ``Problem``
+fields (``api._FIELD_CLASS`` + the dataclass itself), and the named
+capacity constants (``repro/constants.py``).  All three are extracted by
+PARSING the source — never importing it — so the linter stays jax-free
+and sees the tree exactly as committed (an import-time rewrite could not
+hide a violation from it).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Optional, Tuple
+
+__all__ = ["Project"]
+
+_FAULTS_REL = "src/repro/faults.py"
+_API_REL = "src/repro/core/api.py"
+_CONSTANTS_REL = "src/repro/constants.py"
+
+
+def _repo_root() -> str:
+    # src/repro/analysis/project.py -> repo root is four levels up.
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.abspath(os.path.join(here, "..", "..", ".."))
+
+
+def _parse(path: str) -> Optional[ast.Module]:
+    if not os.path.isfile(path):
+        return None
+    with open(path, encoding="utf-8") as f:
+        try:
+            return ast.parse(f.read())
+        except SyntaxError:
+            return None
+
+
+def _module_assign(tree: Optional[ast.Module], name: str) -> Optional[ast.expr]:
+    if tree is None:
+        return None
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    return node.value
+    return None
+
+
+class Project:
+    """Lazily-parsed contract surfaces, shared across all analyzed files.
+
+    ``Project.load()`` anchors at the repo this package lives in — the
+    normal case for both the CLI and the fixture tests (fixtures trip the
+    rules against the REAL registries).  Tests can also construct one with
+    an explicit root to analyze a synthetic tree."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self._known_sites: Optional[Tuple[str, ...]] = None
+        self._field_class: Optional[Dict[str, str]] = None
+        self._problem_fields: Optional[Tuple[str, ...]] = None
+        self._constants: Optional[Dict[str, int]] = None
+
+    _DEFAULT: Optional["Project"] = None
+
+    @classmethod
+    def load(cls, root: Optional[str] = None) -> "Project":
+        if root is not None:
+            return cls(os.path.abspath(root))
+        if cls._DEFAULT is None:
+            cls._DEFAULT = cls(_repo_root())
+        return cls._DEFAULT
+
+    # -- fault sites --------------------------------------------------------
+    @property
+    def known_sites(self) -> Tuple[str, ...]:
+        """``faults.KNOWN_SITES`` parsed from source (empty if absent)."""
+        if self._known_sites is None:
+            val = _module_assign(
+                _parse(os.path.join(self.root, _FAULTS_REL)), "KNOWN_SITES"
+            )
+            sites = []
+            if isinstance(val, (ast.Tuple, ast.List)):
+                for el in val.elts:
+                    if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                        sites.append(el.value)
+            self._known_sites = tuple(sites)
+        return self._known_sites
+
+    # -- Problem cache-key classification -----------------------------------
+    @property
+    def field_class(self) -> Dict[str, str]:
+        """``api._FIELD_CLASS`` parsed from source: field -> class."""
+        if self._field_class is None:
+            val = _module_assign(
+                _parse(os.path.join(self.root, _API_REL)), "_FIELD_CLASS"
+            )
+            out: Dict[str, str] = {}
+            if isinstance(val, ast.Dict):
+                for k, v in zip(val.keys, val.values):
+                    if (
+                        isinstance(k, ast.Constant)
+                        and isinstance(k.value, str)
+                        and isinstance(v, ast.Constant)
+                        and isinstance(v.value, str)
+                    ):
+                        out[k.value] = v.value
+            self._field_class = out
+        return self._field_class
+
+    @property
+    def exempt_fields(self) -> Tuple[str, ...]:
+        return tuple(
+            sorted(f for f, c in self.field_class.items() if c == "exempt")
+        )
+
+    @property
+    def problem_fields(self) -> Tuple[str, ...]:
+        """Annotated field names of the ``Problem`` dataclass."""
+        if self._problem_fields is None:
+            tree = _parse(os.path.join(self.root, _API_REL))
+            fields = []
+            if tree is not None:
+                for node in tree.body:
+                    if isinstance(node, ast.ClassDef) and node.name == "Problem":
+                        for stmt in node.body:
+                            if isinstance(stmt, ast.AnnAssign) and isinstance(
+                                stmt.target, ast.Name
+                            ):
+                                fields.append(stmt.target.id)
+            self._problem_fields = tuple(fields)
+        return self._problem_fields
+
+    # -- pow2/padding constants ---------------------------------------------
+    @property
+    def capacity_constants(self) -> Dict[str, int]:
+        """Module-level integer constants of ``repro/constants.py``."""
+        if self._constants is None:
+            tree = _parse(os.path.join(self.root, _CONSTANTS_REL))
+            out: Dict[str, int] = {}
+            if tree is not None:
+                for node in tree.body:
+                    if isinstance(node, ast.Assign) and isinstance(
+                        node.value, ast.Constant
+                    ):
+                        for t in node.targets:
+                            if isinstance(t, ast.Name) and isinstance(
+                                node.value.value, int
+                            ):
+                                out[t.id] = node.value.value
+            self._constants = out
+        return self._constants

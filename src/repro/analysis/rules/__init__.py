@@ -1,0 +1,15 @@
+"""The checker suite.  Importing this package registers every rule.
+
+One module per contract; each module's docstring states the contract it
+encodes and the PR history that motivated it (docs/analysis.md renders
+the same table for humans).
+"""
+
+from repro.analysis.rules import (  # noqa: F401  (registration imports)
+    atomic_io,
+    cache_key,
+    fault_sites,
+    pow2_constants,
+    single_engine,
+    tracer_hygiene,
+)

@@ -1,0 +1,107 @@
+"""atomic-io: persistent artifacts are published via ioutil.atomic_write_file.
+
+Contract (PR 4's spill manifest, PR 5's program cache, PR 8's checkpoint
+hardening — see CHANGES.md): anything a later process may READ BACK —
+checkpoints, cache entries, spill manifests, reports — is written with
+the tmp + fsync + ``os.replace`` dance that ``ioutil.atomic_write_file``
+owns, so a crash at any byte leaves the old artifact or the new one,
+never a torn hybrid.  The fault-injection suite (tests/test_resilience.py)
+only proves crash-safety for writes routed through that one primitive; a
+raw ``open(path, "w")`` is unprotected by construction.
+
+The checker flags, outside ``src/repro/ioutil.py``:
+
+  * ``open``/``os.fdopen`` with a write-capable constant mode
+    (``w``/``a``/``x``/``+``);
+  * ``os.replace`` / ``os.rename`` (the publish step belongs to ioutil);
+  * ``os.fsync`` (durability belongs to ioutil);
+  * ``Path.write_text`` / ``Path.write_bytes``.
+
+Deliberate exceptions (append-only data files whose manifest is published
+last, directory-level two-phase commits) carry inline
+``# repro: allow(atomic-io) <why this publish is already crash-safe>``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.core import Finding, Rule, SourceFile, dotted, register
+
+_IOUTIL_REL = "src/repro/ioutil.py"
+_HINT = (
+    "publish through repro.ioutil.atomic_write_file (tmp + fsync + "
+    "os.replace) so a crash leaves the old artifact or the new one"
+)
+
+
+def _write_mode(call: ast.Call) -> Optional[str]:
+    """The constant mode string of an open()-style call iff write-capable."""
+    mode_node: Optional[ast.expr] = None
+    if len(call.args) >= 2:
+        mode_node = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "mode":
+            mode_node = kw.value
+    if mode_node is None:
+        return None
+    if not (isinstance(mode_node, ast.Constant) and isinstance(mode_node.value, str)):
+        return None
+    mode = mode_node.value
+    return mode if any(c in mode for c in "wax+") else None
+
+
+@register
+class AtomicIoRule(Rule):
+    id = "atomic-io"
+    summary = (
+        "persistent artifacts are written only via ioutil.atomic_write_file "
+        "— no raw write-mode open/os.replace/fsync in the library"
+    )
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/") and rel != _IOUTIL_REL
+
+    def check(self, sf: SourceFile, project) -> Iterator[Finding]:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            if name in ("open", "io.open", "os.fdopen"):
+                mode = _write_mode(node)
+                if mode is not None:
+                    yield self.finding(
+                        sf,
+                        node,
+                        f"raw {name}(..., {mode!r}) write of a persistent "
+                        "artifact",
+                        hint=_HINT,
+                    )
+            elif name in ("os.replace", "os.rename"):
+                yield self.finding(
+                    sf,
+                    node,
+                    f"{name} outside ioutil — the atomic publish step is "
+                    "atomic_write_file's job",
+                    hint=_HINT,
+                )
+            elif name == "os.fsync":
+                yield self.finding(
+                    sf,
+                    node,
+                    "os.fsync outside ioutil — durability is "
+                    "atomic_write_file's job",
+                    hint=_HINT,
+                )
+            elif isinstance(node.func, ast.Attribute) and node.func.attr in (
+                "write_text",
+                "write_bytes",
+            ):
+                yield self.finding(
+                    sf,
+                    node,
+                    f"Path.{node.func.attr} bypasses the atomic-publish "
+                    "primitive",
+                    hint=_HINT,
+                )

@@ -1,0 +1,144 @@
+"""cache-key: exempt Problem fields stay out of traced programs.
+
+Contract (PR 5's program cache, hardened here): ``Solver`` reuses one
+compiled program across every ``Problem`` that differs only in
+key-EXEMPT fields (``api._FIELD_CLASS`` marks them ``"exempt"`` —
+execution-strategy knobs like ``stream_chunk`` or ``cache_dir``).  If a
+traced program builder reads an exempt field, two Problems that map to
+the SAME cache key produce DIFFERENT programs — whichever compiled first
+silently serves both.  Conversely, every new ``Problem`` field must be
+classified in ``_FIELD_CLASS`` at all (static / conditional / exempt) or
+the cache-key derivation has an undeclared input.
+
+Checks:
+
+  * inside a traced def (see ``analysis.tracing``) or a
+    ``_build_*_program`` builder, no attribute read of a key-exempt
+    field name;
+  * in any file defining both ``class Problem`` and ``_FIELD_CLASS``:
+    the dataclass fields and the classification keys must match exactly,
+    and every classification must be one of static/conditional/exempt.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Finding, Rule, SourceFile, register
+from repro.analysis.tracing import collect_traced_scopes
+
+_CLASSES = ("static", "conditional", "exempt")
+_FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _is_builder(node: ast.AST) -> bool:
+    return (
+        isinstance(node, _FuncDef)
+        and node.name.startswith("_build_")
+        and node.name.endswith("_program")
+    )
+
+
+def _own_field_class(tree: ast.Module):
+    """This module's _FIELD_CLASS literal (fixtures carry their own)."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "_FIELD_CLASS":
+                    if isinstance(node.value, ast.Dict):
+                        return node.value, node
+    return None, None
+
+
+def _own_problem_fields(tree: ast.Module):
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == "Problem":
+            return [
+                (stmt.target.id, stmt)
+                for stmt in node.body
+                if isinstance(stmt, ast.AnnAssign)
+                and isinstance(stmt.target, ast.Name)
+            ], node
+    return None, None
+
+
+@register
+class CacheKeyRule(Rule):
+    id = "cache-key"
+    summary = (
+        "key-exempt Problem fields are never read inside traced program "
+        "builders, and every Problem field is classified in _FIELD_CLASS"
+    )
+
+    def check(self, sf: SourceFile, project) -> Iterator[Finding]:
+        # -- exempt-field reads in traced/builder code ----------------------
+        exempt = set(project.exempt_fields)
+        if exempt:
+            scopes = collect_traced_scopes(sf.tree)
+            hot = set(scopes.defs)
+            for node in ast.walk(sf.tree):
+                if _is_builder(node):
+                    hot.add(node)
+            seen = set()
+            for d in hot:
+                for sub in ast.walk(d):
+                    if (
+                        isinstance(sub, ast.Attribute)
+                        and sub.attr in exempt
+                        and id(sub) not in seen
+                    ):
+                        seen.add(id(sub))
+                        yield self.finding(
+                            sf,
+                            sub,
+                            f"key-exempt Problem field {sub.attr!r} read "
+                            "inside a traced program builder — two Problems "
+                            "with the same cache key would compile different "
+                            "programs",
+                            hint=(
+                                "thread the value in as a runtime argument, "
+                                "or reclassify the field in api._FIELD_CLASS "
+                                "(which widens the cache key)"
+                            ),
+                        )
+
+        # -- Problem fields <-> _FIELD_CLASS sync ---------------------------
+        fc, fc_node = _own_field_class(sf.tree)
+        fields, cls_node = _own_problem_fields(sf.tree)
+        if fc is None or fields is None:
+            return
+        classified = {}
+        for k, v in zip(fc.keys, fc.values):
+            if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                val = v.value if isinstance(v, ast.Constant) else None
+                classified[k.value] = (val, k)
+        for fname, stmt in fields:
+            if fname not in classified:
+                yield self.finding(
+                    sf,
+                    stmt,
+                    f"Problem field {fname!r} is not classified in "
+                    "_FIELD_CLASS — the cache key has an undeclared input",
+                    hint=(
+                        "add it to _FIELD_CLASS as static, conditional, or "
+                        "exempt (exempt fields are excluded from _key)"
+                    ),
+                )
+        field_names = {f for f, _ in fields}
+        for cname, (cval, knode) in classified.items():
+            if cname not in field_names:
+                yield self.finding(
+                    sf,
+                    knode,
+                    f"_FIELD_CLASS entry {cname!r} matches no Problem field",
+                    hint="remove the stale entry or fix the field name",
+                )
+            if cval not in _CLASSES:
+                yield self.finding(
+                    sf,
+                    knode,
+                    f"_FIELD_CLASS[{cname!r}] = {cval!r} is not one of "
+                    f"{'/'.join(_CLASSES)}",
+                    hint="classify as static, conditional, or exempt",
+                )

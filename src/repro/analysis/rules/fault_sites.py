@@ -1,0 +1,129 @@
+"""fault-sites: the fault-injection surface is a closed, documented registry.
+
+Contract (PR 8's resilience runtime): chaos tests steer injection by SITE
+NAME, so the set of names is an API — ``faults.KNOWN_SITES`` is its
+registry and docs/resilience.md its documentation.  Two failure shapes
+this rule closes off:
+
+  * a ``faults.fire("typo.site")`` call whose name is not registered —
+    chaos plans targeting the registry would silently never hit it;
+  * an except-wrapped IO path in the failure-contract modules (streaming,
+    progcache, spill, turnstile, serve) WITHOUT a hook — recovery code the
+    fault suite cannot reach, i.e. untested-by-construction error
+    handling.
+
+The second check is structural: a ``try`` whose body performs file IO and
+that catches exceptions must also call ``faults.fire(...)`` inside the
+``try`` body (the hook sits before the IO it makes injectable).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Finding, Rule, SourceFile, dotted, register
+
+# Modules bound by the failure contract (check 2 applies only here when
+# walking the tree; fixture files are checked unconditionally).
+_FAILURE_SCOPES = (
+    "src/repro/core/streaming.py",
+    "src/repro/core/progcache.py",
+    "src/repro/core/turnstile.py",
+    "src/repro/graph/edgelist.py",
+    "src/repro/serve/",
+    "src/repro/checkpoint/",
+)
+
+_IO_CALLS = frozenset(
+    {
+        "open",
+        "io.open",
+        "os.fdopen",
+        "os.replace",
+        "os.rename",
+        "os.fsync",
+        "os.makedirs",
+        "atomic_write_file",
+        "np.load",
+        "np.save",
+        "np.savez",
+        "pickle.load",
+        "pickle.loads",
+        "pickle.dump",
+        "pickle.dumps",
+        "json.load",
+        "json.dump",
+        "shutil.rmtree",
+    }
+)
+
+
+def _is_fire(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = dotted(node.func)
+    return name is not None and (
+        name == "fire" or name.endswith(".fire")
+    )
+
+
+def _does_io(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = dotted(node.func)
+    if name is None:
+        return False
+    return name in _IO_CALLS or name.rsplit(".", 1)[-1] == "atomic_write_file"
+
+
+@register
+class FaultSitesRule(Rule):
+    id = "fault-sites"
+    summary = (
+        "fire() sites come from faults.KNOWN_SITES, and every except-wrapped "
+        "IO path in the failure-contract modules carries an injection hook"
+    )
+
+    def check(self, sf: SourceFile, project) -> Iterator[Finding]:
+        known = set(project.known_sites)
+        for node in ast.walk(sf.tree):
+            # 1. literal site names must be registered
+            if _is_fire(node) and node.args:
+                site = node.args[0]
+                if (
+                    isinstance(site, ast.Constant)
+                    and isinstance(site.value, str)
+                    and site.value not in known
+                ):
+                    yield self.finding(
+                        sf,
+                        node,
+                        f"fire() site {site.value!r} is not registered in "
+                        "faults.KNOWN_SITES",
+                        hint=(
+                            "add it to faults.KNOWN_SITES and document it in "
+                            "docs/resilience.md's fault-site table"
+                        ),
+                    )
+            # 2. except-wrapped IO without a hook (failure-contract modules)
+            if (
+                isinstance(node, ast.Try)
+                and node.handlers
+                and sf.in_scope(*_FAILURE_SCOPES)
+            ):
+                body_nodes = [n for stmt in node.body for n in ast.walk(stmt)]
+                if any(_does_io(n) for n in body_nodes) and not any(
+                    _is_fire(n) for n in body_nodes
+                ):
+                    yield self.finding(
+                        sf,
+                        node,
+                        "except-wrapped IO path without a faults.fire() hook "
+                        "— this recovery branch is unreachable by the chaos "
+                        "suite",
+                        hint=(
+                            "call faults.fire('<module>.<site>') at the top "
+                            "of the try body (and register the site)"
+                        ),
+                    )

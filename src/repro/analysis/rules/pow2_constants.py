@@ -1,0 +1,112 @@
+"""pow2-constants: bucket floors and capacities come from repro/constants.py.
+
+Contract (PR 3's compaction ladder + every runtime since): recompilation
+count is governed by pow2 bucketing — a padded capacity is snapped to a
+power of two above a FLOOR so nearby sizes share one compiled program.
+Those floors are load-bearing: the retrace-budget smoke and the pinned
+``trace_count`` assertions in the test suite encode them.  A re-typed
+literal floor (``pow2_bucket(n, 64)``) forks the constant; the day
+``constants.py`` is tuned the forked site silently keeps the old value
+and the retrace budget splits.
+
+The checker flags, outside ``src/repro/constants.py``:
+
+  * a literal int passed as the ``floor``/``stride`` argument of
+    ``pow2_bucket``/``ladder_schedule`` (pass ``constants.X`` or a module
+    alias ``_X = constants.X`` instead);
+  * a module-level assignment of a capacity-suffixed name (``*_FLOOR``,
+    ``*_MIN_EDGES``, ``*_MIN_NODES``, ``*_MAX_SEGMENTS``, ``*_STRIDE``)
+    to a literal int — alias the constants surface instead (aliases stay
+    monkeypatch-able for tests; the value has one home).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.core import Finding, Rule, SourceFile, dotted, register
+
+_CONSTANTS_REL = "src/repro/constants.py"
+_CAPACITY_SUFFIXES = (
+    "_FLOOR",
+    "_MIN_EDGES",
+    "_MIN_NODES",
+    "_MAX_SEGMENTS",
+    "_STRIDE",
+)
+# callable name -> (positional index, keyword name) of its capacity args
+_CAPACITY_ARGS = {
+    "pow2_bucket": ((1, "floor"),),
+    "ladder_schedule": ((1, "floor"), (2, "stride")),
+}
+
+
+def _literal_int(node: Optional[ast.expr]) -> Optional[int]:
+    if (
+        node is not None
+        and isinstance(node, ast.Constant)
+        and isinstance(node.value, int)
+        and not isinstance(node.value, bool)
+    ):
+        return node.value
+    return None
+
+
+@register
+class Pow2ConstantsRule(Rule):
+    id = "pow2-constants"
+    summary = (
+        "pow2 bucket floors / ladder capacities come from repro/constants.py "
+        "— no literal floors at call sites, no re-typed capacity constants"
+    )
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/") and rel != _CONSTANTS_REL
+
+    def check(self, sf: SourceFile, project) -> Iterator[Finding]:
+        surface = ", ".join(sorted(project.capacity_constants)) or "(none)"
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                name = dotted(node.func)
+                base = name.rsplit(".", 1)[-1] if name else None
+                for pos, kw in _CAPACITY_ARGS.get(base, ()):
+                    arg = None
+                    if len(node.args) > pos:
+                        arg = node.args[pos]
+                    for k in node.keywords:
+                        if k.arg == kw:
+                            arg = k.value
+                    val = _literal_int(arg)
+                    if val is not None:
+                        yield self.finding(
+                            sf,
+                            arg,
+                            f"literal {kw}={val} passed to {base}() — the "
+                            "capacity is forked from the constants surface",
+                            hint=(
+                                "pass a repro.constants name (surface: "
+                                f"{surface})"
+                            ),
+                        )
+        # module-level re-typed capacity constants
+        for node in sf.tree.body:
+            if not isinstance(node, ast.Assign):
+                continue
+            val = _literal_int(node.value)
+            if val is None:
+                continue
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id.upper().endswith(
+                    _CAPACITY_SUFFIXES
+                ):
+                    yield self.finding(
+                        sf,
+                        node,
+                        f"capacity constant {t.id} = {val} re-typed outside "
+                        "the constants surface",
+                        hint=(
+                            f"alias it: {t.id} = constants.<NAME> (add the "
+                            "value to src/repro/constants.py if it is new)"
+                        ),
+                    )

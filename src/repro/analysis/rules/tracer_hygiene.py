@@ -1,0 +1,147 @@
+"""tracer-hygiene: traced code never round-trips through the host.
+
+Contract (PRs 2-7 accumulated traced program builders in api/turnstile/
+serve): inside a jitted or shard_mapped body, a Python ``if``/``while``
+on a traced value raises TracerBoolConversionError at best and silently
+forces a host sync at worst; ``int()``/``float()``/``bool()``/``np.*``
+on a traced value materialize it to the host, defeating the async
+dispatch pipeline; ``.block_until_ready()``/``.item()``/``.tolist()``/
+``jax.device_get`` are explicit sync points that belong at the driver
+boundary, never inside library traced code.
+
+Detection is scoped to defs the tracer actually enters (see
+``analysis.tracing``: decorator-jitted, name-passed to
+jit/shard_map/vmap/pmap, or nested inside those).  ``static_argnames``
+are honored — branching on a static arg is host control flow by
+construction.  Host-side drivers that legitimately sync (serve engine's
+sampling loop, checkpoint host transfer) are outside traced defs and are
+never flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from repro.analysis.core import Finding, Rule, SourceFile, dotted, register
+from repro.analysis.tracing import collect_traced_scopes
+
+_FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+_SYNC_ATTRS = ("block_until_ready", "item", "tolist")
+_CASTS = ("int", "float", "bool")
+
+
+def _param_names(fn) -> Set[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return {n for n in names if n != "self"}
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _is_noneness_test(test: ast.expr) -> bool:
+    """``x is None`` / ``x is not None`` — host-decidable, never flagged."""
+    return isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+    )
+
+
+def _walk_own(fn) -> Iterator[ast.AST]:
+    """Nodes of ``fn``'s body excluding nested defs (those are visited as
+    their own traced scopes)."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, _FuncDef):
+                stack.append(child)
+
+
+@register
+class TracerHygieneRule(Rule):
+    id = "tracer-hygiene"
+    summary = (
+        "no host round-trips inside traced code: no Python branches on "
+        "traced values, no int()/np.* casts, no block_until_ready/item"
+    )
+
+    def check(self, sf: SourceFile, project) -> Iterator[Finding]:
+        scopes = collect_traced_scopes(sf.tree)
+        for fn, statics in scopes.defs.items():
+            dynamic = _param_names(fn) - statics
+            for node in _walk_own(fn):
+                if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                    test = node.test
+                    if _is_noneness_test(test):
+                        continue
+                    touched = _names_in(test) & dynamic
+                    if touched:
+                        kind = "while" if isinstance(node, ast.While) else "if"
+                        yield self.finding(
+                            sf,
+                            node,
+                            f"Python `{kind}` on traced value(s) "
+                            f"{', '.join(sorted(touched))} inside a traced "
+                            "def — host control flow forces a sync (or "
+                            "raises under jit)",
+                            hint=(
+                                "use jnp.where / lax.cond / lax.while_loop, "
+                                "or declare the argument in static_argnames"
+                            ),
+                        )
+                elif isinstance(node, ast.Call):
+                    name = dotted(node.func)
+                    if name in _CASTS and any(
+                        _names_in(a) & dynamic for a in node.args
+                    ):
+                        yield self.finding(
+                            sf,
+                            node,
+                            f"host cast {name}() of a traced value inside a "
+                            "traced def",
+                            hint=(
+                                "keep it on device (astype / jnp ops); cast "
+                                "at the driver boundary after the program "
+                                "returns"
+                            ),
+                        )
+                    elif name is not None and name.split(".", 1)[0] in (
+                        "np",
+                        "numpy",
+                    ):
+                        if any(_names_in(a) & dynamic for a in node.args):
+                            yield self.finding(
+                                sf,
+                                node,
+                                f"host numpy call {name}() on a traced value "
+                                "inside a traced def — device→host transfer",
+                                hint="use the jnp equivalent",
+                            )
+                    elif name in ("jax.device_get", "device_get"):
+                        yield self.finding(
+                            sf,
+                            node,
+                            "jax.device_get inside a traced def — explicit "
+                            "device→host transfer",
+                            hint="transfers belong at the driver boundary",
+                        )
+                    elif isinstance(
+                        node.func, ast.Attribute
+                    ) and node.func.attr in _SYNC_ATTRS:
+                        yield self.finding(
+                            sf,
+                            node,
+                            f".{node.func.attr}() inside a traced def — "
+                            "host sync point",
+                            hint=(
+                                "sync at the driver boundary; traced code "
+                                "stays async"
+                            ),
+                        )

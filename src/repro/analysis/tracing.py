@@ -1,0 +1,141 @@
+"""Static detection of TRACED code regions (jit / shard_map / vmap bodies).
+
+The tracer-hygiene and cache-key rules both need to know which function
+bodies execute under a jax trace.  Exactly-decidable in general it is not;
+this module pins the repo's actual idioms, which cover every traced
+program builder in the tree:
+
+  * a def decorated ``@jax.jit`` / ``@jit`` / ``@partial(jax.jit, ...)``
+    (``functools.partial`` spelled out included);
+  * a def (or method) whose NAME is passed to ``jax.jit(...)``,
+    ``jit(...)``, ``shard_map(...)``, ``jax.vmap(...)`` / ``vmap(...)``
+    or ``pmap`` anywhere in the same module (``jax.jit(fn)``,
+    ``shard_map(_ladder, mesh=...)``, ``jax.jit(self._decode_impl)``);
+  * every def lexically nested inside a traced def.
+
+Functions merely CALLED from traced code (e.g. ``run_cell`` or the engine
+pass bodies) are NOT marked — that boundary keeps the rule's false-positive
+rate at zero on host-side helpers, and the retrace-budget CI smoke
+(scripts/retrace_smoke.py) backstops what slips past the static net.
+
+``static_argnames`` declared on the jit call/decorator are honored: a
+Python ``if`` on a static argument is host control flow by construction
+and never flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import dotted
+
+__all__ = ["TracedScopes", "collect_traced_scopes"]
+
+_FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+# Callables whose function argument is traced when invoked.
+_TRACING_ENTRY_SUFFIXES = ("jit", "shard_map", "vmap", "pmap")
+
+
+def _is_tracing_entry(func: ast.expr) -> bool:
+    name = dotted(func)
+    if name is None:
+        return False
+    last = name.rsplit(".", 1)[-1]
+    return last in _TRACING_ENTRY_SUFFIXES
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            vals = (
+                kw.value.elts
+                if isinstance(kw.value, (ast.Tuple, ast.List))
+                else [kw.value]
+            )
+            for v in vals:
+                if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                    out.add(v.value)
+    return out
+
+
+def _decorator_trace_info(dec: ast.expr) -> Optional[Set[str]]:
+    """None if the decorator doesn't trace; else its static_argnames."""
+    if _is_tracing_entry(dec):
+        return set()
+    if isinstance(dec, ast.Call):
+        # @partial(jax.jit, static_argnames=...) / @jax.jit(...)
+        if _is_tracing_entry(dec.func):
+            return _static_argnames(dec)
+        fname = dotted(dec.func)
+        if fname is not None and fname.rsplit(".", 1)[-1] == "partial":
+            if dec.args and _is_tracing_entry(dec.args[0]):
+                return _static_argnames(dec)
+    return None
+
+
+class TracedScopes:
+    """The set of traced function defs of one module, with per-def static
+    argument names."""
+
+    def __init__(self):
+        self.defs: Dict[ast.AST, Set[str]] = {}  # traced def -> static args
+        self._parents: Dict[ast.AST, Optional[ast.AST]] = {}
+
+    def is_traced(self, node: ast.AST) -> bool:
+        return node in self.defs
+
+    def enclosing(self, chain: List[ast.AST]) -> Optional[Tuple[ast.AST, Set[str]]]:
+        """Innermost traced def in a lexical def chain (outer..inner)."""
+        for d in reversed(chain):
+            if d in self.defs:
+                return d, self.defs[d]
+        return None
+
+
+def collect_traced_scopes(tree: ast.Module) -> TracedScopes:
+    scopes = TracedScopes()
+
+    # Pass 1: all defs by name (module functions AND methods share the map:
+    # `jax.jit(self._decode_impl)` marks the method by its attr name).
+    by_name: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, _FuncDef):
+            by_name.setdefault(node.name, []).append(node)
+
+    # Pass 2: decorator-marked defs.
+    for node in ast.walk(tree):
+        if isinstance(node, _FuncDef):
+            for dec in node.decorator_list:
+                statics = _decorator_trace_info(dec)
+                if statics is not None:
+                    scopes.defs[node] = statics
+
+    # Pass 3: defs whose name is passed to a tracing entry point.
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and _is_tracing_entry(node.func)):
+            continue
+        if not node.args:
+            continue
+        target = node.args[0]
+        name = None
+        if isinstance(target, ast.Name):
+            name = target.id
+        elif isinstance(target, ast.Attribute):
+            name = target.attr  # jax.jit(self._decode_impl)
+        if name is None:
+            continue
+        statics = _static_argnames(node)
+        for d in by_name.get(name, []):
+            scopes.defs[d] = scopes.defs.get(d, set()) | statics
+
+    # Pass 4: defs nested inside traced defs inherit the traced scope (and
+    # the parent's static names — a closure over a static arg stays static).
+    for d in list(scopes.defs):
+        statics = scopes.defs[d]
+        for child in ast.walk(d):
+            if child is not d and isinstance(child, _FuncDef):
+                scopes.defs.setdefault(child, set(statics))
+    return scopes

@@ -22,7 +22,6 @@ the same two-phase commit structure (documented in DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import re
 import shutil
@@ -70,11 +69,13 @@ def save_checkpoint(
     os.makedirs(tmp)
     # npz holds every leaf; keys are sanitized tree paths.
     np.savez(os.path.join(tmp, "arrays.npz"), **{k: v for k, v in arrays.items()})
+    # repro: allow(atomic-io) write lands in tmp.<step>/ — the directory rename below is the publish
     with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest, use_bin_type=True))
     if os.path.exists(final):
         shutil.rmtree(final)
-    os.replace(tmp, final)  # atomic commit
+    # repro: allow(atomic-io) directory-level two-phase commit: this rename IS the atomic publish
+    os.replace(tmp, final)
     _gc(directory, keep)
     return final
 

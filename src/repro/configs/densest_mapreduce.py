@@ -7,7 +7,7 @@ state — proving the MapReduce-analogue distribution is coherent at
 TWITTER/IM scale."""
 
 import dataclasses
-from typing import Any, Mapping
+from typing import Mapping
 
 from repro.configs.base import ArchSpec, ShapeSpec
 

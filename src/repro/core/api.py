@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import constants
 from repro.core.density import max_passes_bound
 from repro.core.engine import (
     AtLeastKFraction,
@@ -92,23 +93,16 @@ _STREAM_MODES = ("insert", "turnstile")
 # O(t*b) Count-Sketch (§5.1's memory regime).
 _AUTO_SKETCH_NODES = 1_000_000
 
-# Geometric compaction ladder: buffers shrink by gathering survivors into
-# the next power-of-two bucket (graph.partition.pow2_bucket); floors bound
-# the ladder depth (and keep the smallest compiled programs from being
-# degenerate).
-_COMPACT_MIN_EDGES = 256
-_COMPACT_MIN_NODES = 128
-_COMPACT_MAX_SEGMENTS = 64  # runaway guard; ladders are O(log m) deep
-# Single-program mesh ladder: rung capacities shrink by this factor.  4 is
-# the measured sweet spot on the tracked benchmark — halving rungs double
-# the compaction-collective count for edge-slot savings the pass cost no
-# longer dominates (see benchmarks/bench_peel_compaction.py).
-_LADDER_STRIDE = 4
-# ...and its bucket floor: below this many (global) edge slots a pass is
-# trivial, but every extra rung still pays its fixed while-loop/compaction
-# cost inside the program, so the ladder stops coarser than the host
-# schedule's _COMPACT_MIN_EDGES.
-_LADDER_MIN_EDGES = 4096
+# Geometric compaction ladder floors/capacities: aliased from the one
+# constants surface (repro.constants — rationale and the pow2-constants
+# analysis rule live there).  Module-level aliases keep the historical
+# names monkeypatch-able (tests patch api._LADDER_MIN_EDGES to force deep
+# ladders at tiny sizes).
+_COMPACT_MIN_EDGES = constants.COMPACT_MIN_EDGES
+_COMPACT_MIN_NODES = constants.COMPACT_MIN_NODES
+_COMPACT_MAX_SEGMENTS = constants.COMPACT_MAX_SEGMENTS
+_LADDER_STRIDE = constants.LADDER_STRIDE
+_LADDER_MIN_EDGES = constants.LADDER_MIN_EDGES
 
 
 # ---------------------------------------------------------------------------
@@ -473,6 +467,63 @@ class Problem:
             return int(self.max_passes)
         bound = max_passes_bound(n_nodes, self.eps)
         return 2 * bound if self.objective == "directed" else bound
+
+
+# The machine-checked cache-key classification of EVERY Problem field (the
+# ``cache-key-hygiene`` analysis rule parses this dict and cross-checks it
+# against the dataclass — a new field that is not classified here is a
+# lint error, so the contract can never silently rot):
+#
+#   'static'      — part of what the compiled program computes; always in
+#                   the program-cache key (modulo the runtime-argument
+#                   carve-outs _key documents, e.g. c / swept eps).
+#   'conditional' — keys the cache only when the resolved cell reads it
+#                   (sketch geometry, pallas tiles, mesh wiring); dropped
+#                   otherwise so irrelevant knobs never force a recompile.
+#   'exempt'      — host-side driver/scheduling state, NEVER part of a
+#                   compiled program: uniformly dropped from cache keys,
+#                   and reading one inside a traced program builder is a
+#                   lint error (it would bake a host knob into compiled
+#                   output without keying it — the cache-poisoning bug
+#                   class PR 4's review caught by hand).
+_FIELD_CLASS = {
+    "objective": "static",
+    "eps": "static",
+    "k": "static",
+    "c": "static",
+    "backend": "static",
+    "substrate": "static",
+    "max_passes": "static",  # keys via its RESOLVED value (the mp slot)
+    "track_history": "static",
+    "min_deg_fallback": "static",
+    "ceil_count": "static",
+    "sketch_tables": "conditional",
+    "sketch_buckets": "conditional",
+    "sketch_seed": "conditional",
+    "sketch_node_chunk": "conditional",
+    "tile_size": "conditional",
+    "tile_block": "conditional",
+    "pallas_interpret": "conditional",
+    "edge_axes": "conditional",
+    "wire_dtype": "conditional",
+    "c_delta": "exempt",
+    "compaction": "exempt",
+    "twophase_passes": "exempt",
+    "stream_chunk": "exempt",
+    "stream_workers": "exempt",
+    "stream_prefetch": "exempt",
+    "spill_dir": "exempt",
+    "residency_cap_edges": "exempt",
+    "stream_mode": "exempt",
+    "sample_edges": "exempt",
+    "cache_dir": "exempt",
+}
+
+# The uniform exclusion set _key starts from (max_passes keys separately
+# through its resolved value).
+_EXEMPT_FIELDS = frozenset(
+    f for f, cls in _FIELD_CLASS.items() if cls == "exempt"
+)
 
 
 # ---------------------------------------------------------------------------
@@ -952,10 +1003,13 @@ class Solver:
         # eps-sweep programs — the eps/graphs sweeps bake a fixed directed c
         # into the closure, so c must key those) or when the resolved cell
         # never reads it (no spurious recompiles from irrelevant knobs).
-        # compaction/twophase_passes are host-side scheduling: segment
-        # programs key on (seg max_passes, compact_below) via mp/aux instead,
-        # so geometric and twophase ladders share bucket programs.
-        exclude = {"max_passes", "c_delta", "compaction", "twophase_passes"}
+        # The uniform exclusions come from _FIELD_CLASS ('exempt' = host
+        # driver/scheduling state: stream_*/spill/cache_dir/turnstile knobs,
+        # and compaction/twophase_passes — segment programs key on (seg
+        # max_passes, compact_below) via mp/aux instead, so geometric and
+        # twophase ladders share bucket programs); max_passes keys through
+        # its resolved value (the mp slot).
+        exclude = {"max_passes"} | _EXEMPT_FIELDS
         if kind in ("solve", "mesh", "c", "cseg", "cseg_mesh", "ladder_mesh"):
             exclude.add("c")  # these programs take c as a runtime argument
         if kind == "eps":
@@ -970,16 +1024,6 @@ class Solver:
             exclude |= {"tile_size", "tile_block", "pallas_interpret"}
         if problem.substrate != "mesh":
             exclude |= {"edge_axes", "wire_dtype"}
-        # Programs are never built for the streaming substrate; cache_dir is
-        # the host-side persistent-cache knob (it selects WHERE programs are
-        # stored, never what they compute).  The turnstile fields are host
-        # driver state too: the sampled peel re-enters solve() as a plain
-        # insert-mode Problem, so its programs are shared with ordinary
-        # solves of the same shape.
-        exclude |= {
-            "stream_chunk", "stream_workers", "stream_prefetch", "spill_dir",
-            "residency_cap_edges", "cache_dir", "stream_mode", "sample_edges",
-        }
         return (
             kind,
             _fields_key(problem, exclude),

@@ -31,7 +31,6 @@ the paper's own workload):
 from __future__ import annotations
 
 import collections
-import json
 import os
 import shutil
 import threading
@@ -45,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import faults
+from repro import constants, faults
 
 Chunk = Tuple[np.ndarray, np.ndarray, np.ndarray]  # (src, dst, weight)
 
@@ -232,7 +231,9 @@ class StreamingDensest:
             )
         except Exception as e:  # noqa: BLE001 — quarantine + start fresh
             quarantine = path + ".corrupt"
+            # repro: allow(fault-sites) recovery path of the hooked streaming.checkpoint_load try above
             try:
+                # repro: allow(atomic-io) quarantine rename of a corrupt file, not an artifact publish
                 os.replace(path, quarantine)
             except OSError:
                 quarantine = "<rename failed>"
@@ -449,7 +450,7 @@ class StreamingDensest:
         # Pow2-padded node space (with >= 1 permanently-dead pad node for
         # edge padding below): the jitted chunk kernel sees O(log n)
         # distinct degree-vector shapes across the whole ladder.
-        n_pad = pow2_bucket(n_alive + 1, floor=64)
+        n_pad = pow2_bucket(n_alive + 1, floor=constants.STREAM_REBUILD_NODE_FLOOR)
         pad_id = np.int32(n_pad - 1)  # never alive -> pad edges never count
 
         spill: Optional[EdgeSpillWriter] = None
@@ -472,7 +473,7 @@ class StreamingDensest:
                     continue
                 # Per-chunk pow2 length so surviving (ragged) chunks land on
                 # a bounded set of shapes instead of one compile per chunk.
-                cap = pow2_bucket(kept, floor=256)
+                cap = pow2_bucket(kept, floor=constants.STREAM_REBUILD_CHUNK_FLOOR)
                 cs = np.full(cap, pad_id, np.int32)
                 cd = np.full(cap, pad_id, np.int32)
                 cw = np.zeros(cap, w.dtype)
@@ -518,6 +519,7 @@ class StreamingDensest:
                 spill = EdgeSpillWriter(
                     rung_dir, w_dtype if w_dtype is not None else np.float32
                 )
+            # repro: allow(fault-sites) spill.finalize fires edgelist.spill_publish inside this try
             try:
                 np.save(os.path.join(rung_dir, "id_map.npy"), new_id_map)
                 # Publish is atomic (manifest last); a failure here — disk

@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import faults
+from repro import constants, faults
 from repro.core.api import DenseSubgraphResult, Problem, Solver, default_solver
 from repro.graph.edgelist import EdgeList
 from repro.graph.partition import pow2_bucket
@@ -60,13 +60,13 @@ __all__ = [
 
 # Edge buckets the recovered sample is padded into before peeling: one
 # compiled peel program per pow2 bucket, shared across queries.
-_SAMPLE_EDGE_FLOOR = 256
+_SAMPLE_EDGE_FLOOR = constants.TURNSTILE_SAMPLE_EDGE_FLOOR
 # Node bucket floor for the compacted sample peel (query() relabels the
 # sample onto its touched nodes when that shrinks the node space).
-_SAMPLE_NODE_FLOOR = 256
+_SAMPLE_NODE_FLOOR = constants.TURNSTILE_SAMPLE_NODE_FLOOR
 # Update batches are padded to pow2 buckets above this floor: one compiled
 # update program serves every batch up to the floor, then one per doubling.
-_BATCH_FLOOR = 1024
+_BATCH_FLOOR = constants.TURNSTILE_BATCH_FLOOR
 # Decode-round runaway guard (real decodes finish in O(log k) rounds).
 _MAX_DECODE_ROUNDS = 256
 

@@ -11,8 +11,7 @@ Batch layouts per family are documented next to their builders.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Mapping, Optional, Tuple
+from typing import Any, Dict, Mapping, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -51,6 +51,7 @@ from contextlib import contextmanager
 from typing import Any, Callable, Dict, Optional, Tuple
 
 __all__ = [
+    "KNOWN_SITES",
     "FaultPlan",
     "FaultRule",
     "InjectedFault",
@@ -61,6 +62,24 @@ __all__ = [
     "installed",
     "uninstall",
 ]
+
+# The fault-site registry: every ``faults.fire(site, ...)`` call in
+# ``src/repro`` must name a site listed here, with a documented row in the
+# docs/resilience.md table — enforced statically by the ``fault-sites``
+# analysis rule (scripts/analyze.py), which parses this tuple rather than
+# importing the module.  Adding a site = add it here, document it, thread
+# the hook.  (FaultPlan rules stay permissive at runtime so tests can
+# exercise the plan machinery with toy site names.)
+KNOWN_SITES = (
+    "streaming.chunk",
+    "streaming.checkpoint_save",
+    "streaming.checkpoint_load",
+    "progcache.load",
+    "progcache.store",
+    "edgelist.spill_publish",
+    "turnstile.decode",
+    "serve.solve",
+)
 
 
 class InjectedFault(RuntimeError):

@@ -3,7 +3,6 @@ with core/countsketch.py's SketchParams."""
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

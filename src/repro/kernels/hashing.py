@@ -17,7 +17,6 @@ array arithmetic silently).
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 __all__ = [

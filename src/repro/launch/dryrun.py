@@ -30,7 +30,7 @@ def run_cell(
     out_dir: str = "experiments/dryrun",
     variant: str = "baseline",
 ):
-    import jax
+    import jax  # noqa: F401  (device init must precede mesh construction)
 
     from repro.launch import hlo_stats, roofline
     from repro.launch.cells import SkipCell, build_cell, lower_cell
@@ -109,8 +109,11 @@ def run_cell(
         if variant != "baseline":
             tag += f"__{variant}"
         path = os.path.join(out_dir, tag + ".json")
-        with open(path, "w") as f:
-            json.dump(rec, f, indent=1, default=str)
+        from repro.ioutil import atomic_write_file
+
+        atomic_write_file(
+            path, lambda f: json.dump(rec, f, indent=1, default=str), mode="w"
+        )
         rec["path"] = path
     return rec
 

@@ -8,7 +8,7 @@ init, smoke tests see the 1 real CPU device.
 
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import numpy as np

@@ -12,6 +12,8 @@ import json
 import os
 from typing import Dict, List
 
+from repro.ioutil import atomic_write_file
+
 
 def load(out_dir: str = "experiments/dryrun", variant: str | None = "baseline") -> List[Dict]:
     recs = []
@@ -158,8 +160,8 @@ def inject(path: str = "EXPERIMENTS.md"):
         doc = f.read()
     pre = doc.split(begin)[0]
     post = doc.split(end)[1]
-    with open(path, "w") as f:
-        f.write(pre + begin + "\n" + generate() + "\n" + end + post)
+    body = pre + begin + "\n" + generate() + "\n" + end + post
+    atomic_write_file(path, lambda f: f.write(body), mode="w")
     print(f"injected tables into {path}")
 
 

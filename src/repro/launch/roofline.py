@@ -11,7 +11,6 @@ module (per-device shapes), so chips cancels: term = per_device_qty / rate.
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import Any, Dict, Optional
 
 PEAK_FLOPS_BF16 = 197e12  # per chip, TPU v5e

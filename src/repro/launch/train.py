@@ -12,13 +12,11 @@ dry-run surfaces) are recorded in TPU_XLA_FLAGS below and applied via
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
-import numpy as np
 
 # Collective/compute overlap flags for real TPU runs (documented + applied
 # when --tpu-flags is passed; harmless defaults for the CPU simulation).

@@ -8,7 +8,7 @@ densest-subgraph core (see DESIGN.md §5: shared kernel regime).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import dense, dense_init, mlp, mlp_init
+from repro.models.common import mlp, mlp_init
 from repro.sharding.rules import shard
 
 

@@ -12,8 +12,6 @@ and llama4-maverick-400b-a17b via `TransformerConfig`.  Forward paths:
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import partial
 from typing import Any, Optional, Tuple
 
 import jax

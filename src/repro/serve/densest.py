@@ -45,7 +45,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro import faults
+from repro import constants, faults
 from repro.core.api import Problem, Solver
 from repro.graph.edgelist import EdgeList, to_csr
 from repro.graph.partition import pow2_bucket
@@ -53,10 +53,11 @@ from repro.serve.resilience import CircuitBreaker, ResilienceConfig
 
 __all__ = ["DensestQueryEngine", "QueryResult"]
 
-# Bucket floors: below these the pad fraction is irrelevant and smaller
-# buckets would only mint more compiled programs.
-_NODE_FLOOR = 64
-_EDGE_FLOOR = 256
+# Bucket floors (aliased from the one constants surface, repro.constants):
+# below these the pad fraction is irrelevant and smaller buckets would only
+# mint more compiled programs.
+_NODE_FLOOR = constants.SERVE_NODE_FLOOR
+_EDGE_FLOOR = constants.SERVE_EDGE_FLOOR
 
 
 @dataclasses.dataclass(frozen=True)

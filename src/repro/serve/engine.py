@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,9 +20,7 @@ through the scan (activations stashed per tick — classic GPipe memory).
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

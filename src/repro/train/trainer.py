@@ -141,6 +141,7 @@ class Trainer:
                 raise StepTimeout(f"step {executed} took {dt:.1f}s")
             if cfg.metrics_path and executed % cfg.log_every == 0:
                 os.makedirs(os.path.dirname(cfg.metrics_path) or ".", exist_ok=True)
+                # repro: allow(atomic-io) append-only JSONL metrics log; readers tolerate a torn final line
                 with open(cfg.metrics_path, "a") as f:
                     f.write(json.dumps({"step": executed, **metrics}) + "\n")
             self.metrics_log.append({"step": executed, **metrics})

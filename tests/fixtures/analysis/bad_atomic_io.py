@@ -1,0 +1,30 @@
+"""Trips atomic-io: every raw-write shape the rule closes off.
+
+The os.replace line reproduces the PR 8 near-miss verbatim: a checkpoint
+published with a bare rename, no tmp-file fsync — the acceptance
+criterion's "deliberately reintroduce a raw os.replace checkpoint write"
+case.
+"""
+
+import os
+import pathlib
+
+
+def save_checkpoint(state: bytes, path: str) -> None:
+    with open(path + ".new", "wb") as f:  # raw write-mode open (finding)
+        f.write(state)
+    os.replace(path + ".new", path)  # raw publish outside ioutil (finding)
+
+
+def log_line(path: str, line: str) -> None:
+    with open(path, mode="a") as f:  # append is write-capable too (finding)
+        f.write(line)
+
+
+def flush_hard(f) -> None:
+    f.flush()
+    os.fsync(f.fileno())  # durability outside ioutil (finding)
+
+
+def sidecar(path: str, text: str) -> None:
+    pathlib.Path(path).write_text(text)  # bypasses the primitive (finding)

@@ -1,0 +1,43 @@
+"""Trips cache-key: exempt-field reads in traced code + a drifted registry.
+
+The `_FIELD_CLASS` / `Problem` pair here is a miniature of the real one
+in core/api.py, drifted in all three ways the rule closes off: an
+unclassified field, a stale entry, and a bogus classification value.
+The exempt-field reads use REAL exempt names from the repo registry
+(``stream_chunk``, ``cache_dir``) — fixture mode runs against the real
+project surfaces.
+"""
+
+import dataclasses
+
+import jax
+
+
+def _build_solve_program(prob, n_pad):
+    chunk = prob.stream_chunk  # exempt field inside a builder (finding)
+
+    def run(edges):
+        return edges[:chunk]
+
+    return jax.jit(run)
+
+
+@jax.jit
+def _kernel(prob, x):
+    cache = prob.cache_dir  # exempt read in a traced def (finding)
+    del cache
+    return -x
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    eps: float = 0.1
+    objective: str = "densest"
+    shiny_new_knob: int = 0  # not classified below (finding)
+
+
+_FIELD_CLASS = {
+    "eps": "static",
+    "objective": "decorative",  # not static/conditional/exempt (finding)
+    "renamed_away": "exempt",  # matches no Problem field (finding)
+}

@@ -1,0 +1,10 @@
+"""Trips single-engine twice: a re-derived threshold and a shadow def."""
+
+
+def peel_once(eps, rho, degs):
+    thresh = 2.0 * (1.0 + eps) * rho  # re-typed threshold (finding)
+    return degs < thresh
+
+
+def removal_threshold(eps, rho):  # shadow of the engine's one site (finding)
+    return (1 + eps) * 2 * rho  # reversed operand order (finding)

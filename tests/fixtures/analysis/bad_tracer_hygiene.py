@@ -1,0 +1,31 @@
+"""Trips tracer-hygiene: every host-round-trip shape inside traced defs."""
+
+from functools import partial
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def branchy(x, y):
+    if x > 0:  # Python branch on a traced value (finding)
+        return y
+    while y.sum() < 0:  # Python loop on a traced value (finding)
+        y = y + 1
+    return y if y.size else x  # ternary is host control flow too (finding)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def casts(v, n):
+    k = int(v[0])  # host cast of a traced value (finding)
+    a = np.asarray(v)  # host numpy on a traced value (finding)
+    jax.device_get(v)  # explicit transfer (finding)
+    v.block_until_ready()  # sync point (finding)
+    return a[: n + k]
+
+
+def _inner(z):
+    return float(z)  # traced via the jit() call below (finding)
+
+
+run = jax.jit(_inner)

@@ -1,0 +1,6 @@
+"""Trips unused-suppression: a well-formed exemption matching no finding."""
+
+
+def harmless(x: int) -> int:
+    # repro: allow(atomic-io) stale: the write this guarded was deleted (finding)
+    return x + 1

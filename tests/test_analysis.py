@@ -1,0 +1,171 @@
+"""Tier-1 gate for the invariant linter (repro.analysis).
+
+Two halves:
+
+  * the CURRENT TREE is clean — ``analyze_paths(["src/repro"])`` returns
+    no findings (suppressions all justified and all used), and the CLI
+    gate (``scripts/analyze.py --strict``) exits 0;
+  * the RULES WORK — every known-bad fixture in tests/fixtures/analysis/
+    trips exactly the rules its name promises, with pinned counts, the
+    ok_* fixtures stay silent, and every registered rule is tripped by at
+    least one fixture (a checker nobody can trip is dead weight).
+
+Deliberately jax-free: this file must pass in the same bare CPython the
+CI static-analysis job uses.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (
+    META_RULES,
+    Project,
+    RULES,
+    all_rules,
+    analyze_file,
+    analyze_paths,
+    render_finding,
+)
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "analysis")
+
+
+def _counts(findings):
+    out = {}
+    for f in findings:
+        out[f.rule] = out.get(f.rule, 0) + 1
+    return out
+
+
+def _fixture(name):
+    return analyze_file(os.path.join(FIXTURES, name), rel=name, scoped=False)
+
+
+# --------------------------------------------------------------------------
+# the tree is clean
+# --------------------------------------------------------------------------
+
+
+def test_tree_is_clean():
+    findings = analyze_paths(
+        ["src/repro"], root=REPO, project=Project.load(), scoped=True
+    )
+    assert findings == [], "\n".join(render_finding(f) for f in findings)
+
+
+def test_cli_strict_exits_zero():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "analyze.py"), "--strict"],
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_lists_every_rule():
+    proc = subprocess.run(
+        [
+            sys.executable,
+            os.path.join(REPO, "scripts", "analyze.py"),
+            "--list-rules",
+        ],
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+    )
+    assert proc.returncode == 0
+    for rid in all_rules():
+        assert rid in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# the fixture corpus trips every rule
+# --------------------------------------------------------------------------
+
+# fixture file -> exact {rule id: finding count}
+CASES = {
+    "bad_single_engine.py": {"single-engine": 3},
+    "bad_atomic_io.py": {"atomic-io": 5},
+    "bad_fault_sites.py": {"fault-sites": 2},
+    "bad_cache_key.py": {"cache-key": 5},
+    "bad_tracer_hygiene.py": {"tracer-hygiene": 8},
+    "bad_pow2_constants.py": {"pow2-constants": 5},
+    "bad_unused_suppression.py": {"unused-suppression": 1},
+    "bad_suppression.py": {"bad-suppression": 4, "atomic-io": 1},
+    "ok_suppressed.py": {},
+    "ok_strings_comments.py": {},
+}
+
+
+@pytest.mark.parametrize("name,expected", sorted(CASES.items()))
+def test_fixture(name, expected):
+    findings = _fixture(name)
+    got = _counts(findings)
+    assert got == expected, "\n".join(render_finding(f) for f in findings)
+
+
+def test_every_rule_has_a_tripping_fixture():
+    tripped = set()
+    for name in CASES:
+        tripped.update(f.rule for f in _fixture(name))
+    registered = set(RULES) | set(META_RULES)
+    assert registered == tripped, (
+        f"rules with no tripping fixture: {sorted(registered - tripped)}; "
+        f"fixtures tripping unknown rules: {sorted(tripped - registered)}"
+    )
+
+
+def test_findings_carry_anchor_and_hint():
+    for f in _fixture("bad_atomic_io.py"):
+        assert f.line > 0
+        assert f.rule == "atomic-io"
+        assert f.hint  # every checker finding ships a fix-it hint
+        assert "bad_atomic_io.py" in render_finding(f)
+
+
+# --------------------------------------------------------------------------
+# acceptance: reintroducing a raw os.replace checkpoint write fails the gate
+# --------------------------------------------------------------------------
+
+
+def test_reintroduced_raw_checkpoint_write_fails(tmp_path):
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    bad = pkg / "ckpt.py"
+    bad.write_text(
+        "import os\n"
+        "def save(state, path):\n"
+        "    with open(path + '.new', 'wb') as f:\n"
+        "        f.write(state)\n"
+        "    os.replace(path + '.new', path)\n"
+    )
+    findings = analyze_paths(
+        ["src/repro"], root=str(tmp_path), project=Project.load(), scoped=True
+    )
+    assert _counts(findings) == {"atomic-io": 2}
+    lines = sorted(f.line for f in findings)
+    assert lines == [3, 5]  # the open() and the os.replace, by line
+    assert all(f.path == "src/repro/ckpt.py" for f in findings)
+
+
+def test_unjustified_suppression_does_not_suppress(tmp_path):
+    bad = tmp_path / "sneaky.py"
+    bad.write_text(
+        "import os\n"
+        "# repro: allow(atomic-io)\n"
+        "os.replace('a', 'b')\n"
+    )
+    got = _counts(analyze_file(str(bad), rel="sneaky.py", scoped=False))
+    assert got == {"atomic-io": 1, "bad-suppression": 1}
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def oops(:\n")
+    findings = analyze_file(str(bad), rel="broken.py", scoped=False)
+    assert [f.rule for f in findings] == ["syntax-error"]

@@ -170,7 +170,6 @@ def test_gnn_molecule_train_step(arch):
 
 
 def test_sage_sampled_train_step():
-    from repro.models.gnn import graphsage as m
 
     spec = get_arch("graphsage-reddit")
     shape = dict(n_nodes=500, d_feat=16, batch_nodes=8, fanout=(5, 3), n_classes=4)

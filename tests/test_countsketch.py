@@ -2,7 +2,6 @@
 peeling quality (Table 4 analogue)."""
 
 import numpy as np
-import pytest
 
 from repro.core import (
     densest_subgraph,

@@ -25,6 +25,11 @@ def test_docs_links_resolve():
     assert errors == [], "\n".join(errors)
 
 
+def test_rule_table_in_sync_with_registry():
+    errors = check_docs.check_rule_table()
+    assert errors == [], "\n".join(errors)
+
+
 def test_module_link_checker_catches_rot():
     assert check_docs._check_module_token("repro.core.api.Solver") is None
     assert check_docs._check_module_token("repro.core.solve") is None

@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.core.countsketch import make_sketch_params
-from repro.graph import edgelist
 from repro.graph.generators import planted_dense_subgraph
 from repro.graph.partition import bucket_edges_by_tile
 from repro.kernels.count_sketch.ops import count_sketch_update

@@ -6,7 +6,6 @@ import json
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 from repro.launch import hlo_stats

@@ -22,7 +22,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh
 
 import repro.core.api as api_mod
@@ -32,7 +31,6 @@ from repro.core import (
     make_distributed_peel_ladder,
     shard_edges,
 )
-from repro.graph.edgelist import EdgeList
 from repro.graph.partition import ladder_schedule, pow2_bucket
 from repro.graph.generators import directed_planted, planted_dense_subgraph
 

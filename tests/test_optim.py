@@ -12,7 +12,6 @@ from repro.optim.adamw import Quantized, _dequantize, _quantize
 from repro.optim.compression import (
     CompressionConfig,
     compress_decompress_psum,
-    init_error_state,
 )
 
 

@@ -1,8 +1,6 @@
 """GPipe pipeline over a mesh axis: output must equal the sequential stack,
 including under grad; bubble accounting sanity."""
 
-import os
-
 import numpy as np
 import pytest
 

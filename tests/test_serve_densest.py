@@ -20,8 +20,6 @@ import collections
 import numpy as np
 import pytest
 
-import jax.numpy as jnp
-
 from repro.core import Problem, Solver, solve
 from repro.graph.edgelist import EdgeList, from_numpy, to_csr
 from repro.graph.generators import chung_lu_power_law

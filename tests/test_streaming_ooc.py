@@ -8,8 +8,6 @@ memmap spill ladder (bit-identity + checkpoint/resume mid-ladder), and the
 rung-trigger accounting regression.
 """
 
-import os
-
 import numpy as np
 import pytest
 

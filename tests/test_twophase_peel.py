@@ -3,7 +3,6 @@ density and set): compaction is pure renumbering, Lemma 4 bounds phase-2
 size.  Runs on a 1-device mesh (the collective structure is identical)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import Mesh
