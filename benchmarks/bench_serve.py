@@ -26,6 +26,11 @@ Measures the three serving claims (ISSUE acceptance criteria):
     (``core/progcache.py`` disk tier; the child asserts it compiled
     NOTHING), plus the populate cost.  This is the replica-restart /
     autoscale path the persistent cache exists for.
+  * **local-vs-BFS scaling sweep** — per-query work (nodes touched, p50
+    latency) of ``extraction='local'`` (Andersen pruned-frontier,
+    core/local.py) stays flat across a 30k->300k node sweep while the
+    untruncated radius-2 BFS ego-net grows with the graph
+    (``--skip-sweep`` for smoke runs).
 
 Writes experiments/bench/BENCH_serve.json (committed baseline).
 """
@@ -130,6 +135,11 @@ def main(argv=None) -> int:
                          "(default: a fresh temp dir)")
     ap.add_argument("--skip-cold-start", action="store_true",
                     help="skip the subprocess cold-start measurements")
+    ap.add_argument("--skip-sweep", action="store_true",
+                    help="skip the local-vs-BFS extraction scaling sweep")
+    ap.add_argument("--sweep-sizes", default="30000,95000,300000",
+                    help="comma-separated graph sizes for the scaling sweep")
+    ap.add_argument("--sweep-queries", type=int, default=32)
     ap.add_argument("--skip-naive", action="store_true",
                     help="skip the compile-per-shape sequential_exact "
                          "baseline (it dominates wall time)")
@@ -300,6 +310,82 @@ def main(argv=None) -> int:
         finally:
             if owns_dir:
                 shutil.rmtree(cache_dir, ignore_errors=True)
+
+    # ---- local-vs-BFS extraction scaling sweep --------------------------
+    # THE substrate='local' claim (ISSUE 10): per-query work of the
+    # Andersen extraction is governed by the budget, not by n, so nodes
+    # touched and p50 latency stay FLAT across a 10x graph sweep while the
+    # radius-2 BFS ego-net (untruncated, the honest comparison) grows with
+    # the graph.  Both modes answer through the identical engine surface.
+    if not args.skip_sweep:
+        sizes = [int(s) for s in args.sweep_sizes.split(",")]
+        sweep = {
+            "sizes": sizes,
+            "queries": args.sweep_queries,
+            "bfs_radius": 2,
+            "local_budget": None,  # engine default (constants.LOCAL_BUDGET)
+            "bfs": [],
+            "local": [],
+        }
+        for n in sizes:
+            g = chung_lu_power_law(
+                n, exponent=2.0, avg_deg=args.avg_deg, seed=1
+            )
+            ss = np.random.default_rng(11).integers(
+                0, n, args.sweep_queries
+            ).tolist()
+            for mode in ("bfs", "local"):
+                kw = (
+                    {"radius": 2, "max_ego_nodes": None}
+                    if mode == "bfs"
+                    else {"extraction": "local"}
+                )
+                e = DensestQueryEngine(
+                    g, prob, max_batch=args.max_batch, max_wait_ms=0.0, **kw
+                )
+                e.query_many(ss)  # warm every bucket program once
+                t0 = time.perf_counter()
+                rs = e.query_many(ss)
+                wall = time.perf_counter() - t0
+                point = {
+                    "n": n,
+                    "mean_extracted_nodes": round(
+                        float(np.mean([r.n_ego for r in rs])), 1
+                    ),
+                    "p50_ms": round(
+                        _pct([r.latency_s for r in rs], 50) * 1e3, 3
+                    ),
+                    "qps": round(len(ss) / wall, 2),
+                }
+                if mode == "local":
+                    sweep["local_budget"] = e.local_budget
+                    # counters span warm + measured passes: per-query mean.
+                    point["mean_nodes_touched"] = round(
+                        e.local_nodes_touched / (2 * len(ss)), 1
+                    )
+                    point["mean_edges_scanned"] = round(
+                        e.local_edges_scanned / (2 * len(ss)), 1
+                    )
+                sweep[mode].append(point)
+                print(f"sweep n={n} {mode}: {point}")
+        first, last = sweep["local"][0], sweep["local"][-1]
+        sweep["local_work_growth_x"] = round(
+            last["mean_nodes_touched"] / max(first["mean_nodes_touched"], 1e-9),
+            2,
+        )
+        fb, lb = sweep["bfs"][0], sweep["bfs"][-1]
+        sweep["bfs_work_growth_x"] = round(
+            lb["mean_extracted_nodes"]
+            / max(fb["mean_extracted_nodes"], 1e-9),
+            2,
+        )
+        report["local_vs_bfs_sweep"] = sweep
+        print(
+            "sweep work growth over "
+            f"{sizes[0]}->{sizes[-1]}: local "
+            f"{sweep['local_work_growth_x']}x, "
+            f"bfs {sweep['bfs_work_growth_x']}x"
+        )
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

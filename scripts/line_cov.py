@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Stdlib line-coverage mirror of the CI coverage gate (no pytest-cov).
+
+CI's tests-fast job gates on ``pytest --cov=repro --cov-fail-under=N``
+(.github/workflows/ci.yml); the dev image has no coverage tooling, so
+this script reproduces the measurement with a ``sys.settrace`` hook that
+instruments ONLY frames under src/repro (everything else returns None
+from the tracer, so jax/numpy internals run untraced at full speed) and
+derives the denominator from compiled code objects (``co_lines``), a
+close approximation of coverage.py's statement set.
+
+Usage:  PYTHONPATH=src python scripts/line_cov.py [extra pytest args]
+
+Runs the not-slow suite by default (exactly what CI gates on) and prints
+per-package and total percentages.  The committed ``--cov-fail-under``
+floor in ci.yml sits a few points below this script's measurement to
+absorb the (small, systematic) difference from coverage.py's parser.
+"""
+
+import os
+import sys
+import threading
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src", "repro")
+
+_covered = {}  # abspath -> set of executed line numbers
+
+
+def _make_local(lines):
+    def local(frame, event, arg):
+        if event == "line":
+            lines.add(frame.f_lineno)
+        return local
+
+    return local
+
+
+def _tracer(frame, event, arg):
+    if event != "call":
+        return None
+    fn = frame.f_code.co_filename
+    if not fn.startswith(SRC):
+        return None
+    lines = _covered.setdefault(fn, set())
+    lines.add(frame.f_lineno)
+    return _make_local(lines)
+
+
+def _executable_lines(path):
+    with open(path, encoding="utf-8") as fh:
+        code = compile(fh.read(), path, "exec")
+    lines = set()
+    stack = [code]
+    while stack:
+        c = stack.pop()
+        lines.update(ln for _, _, ln in c.co_lines() if ln)
+        stack.extend(k for k in c.co_consts if hasattr(k, "co_lines"))
+    return lines
+
+
+def main(argv):
+    threading.settrace(_tracer)
+    sys.settrace(_tracer)
+    import pytest  # after settrace: collection-time imports count
+
+    rc = pytest.main(
+        ["-q", "-m", "not slow", os.path.join(REPO, "tests"), *argv]
+    )
+    sys.settrace(None)
+    threading.settrace(None)
+    if rc != 0:
+        print("line_cov: test run failed; coverage not reported")
+        return int(rc)
+
+    total_hit = total_lines = 0
+    rows = []
+    for dirpath, _, names in sorted(os.walk(SRC)):
+        for name in sorted(names):
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, name)
+            want = _executable_lines(path)
+            hit = want & _covered.get(path, set())
+            total_hit += len(hit)
+            total_lines += len(want)
+            pct = 100.0 * len(hit) / len(want) if want else 100.0
+            rows.append((pct, os.path.relpath(path, REPO), len(hit), len(want)))
+    for pct, rel, h, w in sorted(rows):
+        print(f"{pct:6.1f}%  {h:5d}/{w:<5d}  {rel}")
+    grand = 100.0 * total_hit / total_lines if total_lines else 100.0
+    print(f"TOTAL {grand:.2f}%  ({total_hit}/{total_lines} lines)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

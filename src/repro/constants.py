@@ -62,6 +62,23 @@ STREAM_REBUILD_CHUNK_FLOOR = 256
 SERVE_NODE_FLOOR = 64
 SERVE_EDGE_FLOOR = 256
 
+# --- local (Andersen) substrate (core/local.py, serve/densest.py) -----------
+# Default candidate-set size cap of the pruned-frontier exploration: per-query
+# work is bounded by the budget (times the candidate volume), independent of n.
+LOCAL_BUDGET = 512
+# Expansion-round cap (each round scans only the newly admitted rows).
+LOCAL_ROUNDS = 8
+# Degrade-ladder floor: the serving engine's budget-halving fallback rung
+# stops here (a smaller candidate set answers nothing a BFS rung would).
+LOCAL_BUDGET_FLOOR = 64
+# Work (volume) cap factor: one exploration scans at most
+# budget * LOCAL_VOLUME_FACTOR CSR slots, applied at ADMISSION (a frontier
+# vertex whose row does not fit in the remaining work budget is not
+# admitted), so per-query work is bounded by construction even when a
+# power-law hub sits next to the seed — the property BENCH_serve.json's
+# local_vs_bfs_sweep holds flat across graph sizes.
+LOCAL_VOLUME_FACTOR = 32
+
 # --- turnstile runtime (core/turnstile.py) ----------------------------------
 # IBLT cell count floor per level (pow2 of the sample budget tau) and the
 # compact pow2 buckets the recovered sample is peeled in.

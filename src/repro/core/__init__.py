@@ -24,6 +24,8 @@ thin delegations through the same lowering and stay bit-identical:
   densest_subgraph_distributed     MapReduce analogue on a device mesh
   StreamingDensest                 semi-streaming driver w/ checkpoint+stragglers
   TurnstileDensest/TurnstileSketch ℓ0-sketch dynamic-stream runtime (±edges)
+  LocalExplorer                    Andersen pruned-frontier exploration
+                                   (substrate='local', per-seed queries)
   densest_subgraph_exact           Goldberg max-flow exact oracle
   charikar_greedy                  node-at-a-time 2-approx baseline [10]
   run_peel / PeelOutcome           the engine itself (policies × backends)
@@ -70,6 +72,7 @@ from repro.core.exact import (
     densest_subgraph_brute,
     densest_subgraph_exact,
 )
+from repro.core.local import LocalExploration, LocalExplorer
 from repro.core.mapreduce import (
     densest_subgraph_distributed,
     make_distributed_directed_peel,
@@ -110,6 +113,8 @@ __all__ = [
     "DirectedST",
     "ExactBackend",
     "FnBackend",
+    "LocalExploration",
+    "LocalExplorer",
     "MeshSegmentSumBackend",
     "PeelOutcome",
     "PeelResult",  # deprecated alias of DenseSubgraphResult

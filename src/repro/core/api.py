@@ -85,7 +85,7 @@ __all__ = [
 
 _OBJECTIVES = ("undirected", "at_least_k", "directed")
 _BACKENDS = ("exact", "sketch", "pallas", "auto")
-_SUBSTRATES = ("jit", "mesh", "streaming", "auto")
+_SUBSTRATES = ("jit", "mesh", "streaming", "local", "auto")
 _COMPACTIONS = ("off", "twophase", "geometric", "auto")
 _STREAM_MODES = ("insert", "turnstile")
 
@@ -103,6 +103,8 @@ _COMPACT_MIN_NODES = constants.COMPACT_MIN_NODES
 _COMPACT_MAX_SEGMENTS = constants.COMPACT_MAX_SEGMENTS
 _LADDER_STRIDE = constants.LADDER_STRIDE
 _LADDER_MIN_EDGES = constants.LADDER_MIN_EDGES
+_LOCAL_BUDGET = constants.LOCAL_BUDGET
+_LOCAL_ROUNDS = constants.LOCAL_ROUNDS
 
 
 # ---------------------------------------------------------------------------
@@ -160,7 +162,8 @@ class Problem:
 
     * ``substrate`` — ``'jit'``, ``'mesh'`` (shard_map over an
       edge-sharded device mesh, §5.2; needs ``solve(..., mesh=...)``),
-      ``'streaming'`` (host-chunked driver, O(n) node state), or
+      ``'streaming'`` (host-chunked driver, O(n) node state),
+      ``'local'`` (Andersen per-seed exploration, below), or
       ``'auto'`` (mesh iff a mesh was supplied and >1 device is visible).
     * ``edge_axes`` / ``wire_dtype`` — mesh only: shard axes and the
       degree-psum wire format (``'bf16'`` halves the dominant collective);
@@ -203,6 +206,30 @@ class Problem:
       live graph).  Larger τ tightens the sampling (1+eps) factor at
       O(τ·log n) sketch memory.  ``sketch_seed`` (below) also seeds the
       ℓ0 hash family — same seed, bit-reproducible runs.
+
+    **Local substrate** (Andersen's per-seed exploration, arXiv
+    cs/0702078 — core/local.py; all three knobs are host-side extraction
+    state, uniformly cache-key-exempt: the compiled program only ever
+    sees the bucket-padded candidate subgraph):
+
+    * ``substrate='local'`` answers PER-SEED queries: ``solve(graph,
+      problem, seed=<node id>)`` grows a pruned-frontier candidate set
+      around the seed (work bounded by the budget, independent of n) and
+      peels its induced subgraph through the same cached jit pass body.
+      Undirected objective and exact backend only; compaction is forced
+      off (nothing to amortize at candidate scale).  Provenance reports
+      ``substrate='local'`` and ``extras['local']`` carries the
+      exploration counters.  The result's density never exceeds the
+      exact optimum and is (2+2eps)-approximate FOR THE CANDIDATE SET —
+      the whole-graph guarantee does not survive locality
+      (docs/serving.md; pinned by tests/test_property_serve.py).
+    * ``local_budget`` — candidate-set size cap (the per-query work
+      knob; the serving engine's degrade ladder halves it under
+      pressure).
+    * ``local_rounds`` — frontier expansion round cap.
+    * ``local_alpha`` — prune threshold scale: a frontier vertex joins
+      only with ``deg into T >= max(local_alpha * rho(T), 1)``; 1.0
+      admits exactly the vertices that cannot dilute T's density.
 
     **Serving** (host-side, cache-key-exempt):
 
@@ -284,6 +311,12 @@ class Problem:
     # seeds the ℓ0 hash family.
     stream_mode: str = "insert"  # insert | turnstile
     sample_edges: int = 1 << 14  # ℓ0 sample budget τ (per-query peel size)
+    # Local (Andersen) substrate parameters (core/local.py).  Host-side
+    # exploration state, uniformly cache-key-exempt: the compiled program
+    # only ever sees the bucket-padded candidate subgraph.
+    local_budget: int = _LOCAL_BUDGET  # candidate-set size cap
+    local_rounds: int = _LOCAL_ROUNDS  # frontier expansion round cap
+    local_alpha: float = 1.0  # prune scale: deg into T >= alpha * rho(T)
     # Persistent program cache (host-side knob, uniformly cache-key-exempt):
     # directory for serialized compiled programs so a FRESH process skips the
     # cold compile (see core/progcache.py and docs/serving.md).  A
@@ -331,6 +364,12 @@ class Problem:
             )
         if self.sample_edges < 1:
             raise ValueError(f"sample_edges={self.sample_edges} must be >= 1")
+        if self.local_budget < 1:
+            raise ValueError(f"local_budget={self.local_budget} must be >= 1")
+        if self.local_rounds < 1:
+            raise ValueError(f"local_rounds={self.local_rounds} must be >= 1")
+        if self.local_alpha < 0:
+            raise ValueError(f"local_alpha={self.local_alpha} must be >= 0")
         if not isinstance(self.edge_axes, tuple):
             object.__setattr__(self, "edge_axes", tuple(self.edge_axes))
 
@@ -376,7 +415,7 @@ class Problem:
                     "sketch a sketch: the ℓ0 edge sample already bounds the "
                     "peel's degree memory — use backend='exact' or 'pallas'"
                 )
-            if self.substrate in ("mesh", "streaming"):
+            if self.substrate in ("mesh", "streaming", "local"):
                 raise ValueError(
                     "stream_mode='turnstile' is its own runtime (device "
                     "sketch + sampled peel on the jit substrate); use "
@@ -388,6 +427,28 @@ class Problem:
                 self,
                 backend="exact" if self.backend == "auto" else self.backend,
                 substrate="jit",
+                compaction="off",
+            )
+        if self.substrate == "local":
+            # Andersen local exploration: host frontier pruning + a jit
+            # solve of the bucket-padded candidate subgraph (core/local.py).
+            if self.objective != "undirected":
+                raise ValueError(
+                    "substrate='local' prunes its frontier against the "
+                    "undirected density (Andersen, arXiv cs/0702078); use "
+                    "objective='undirected'"
+                )
+            if self.backend in ("sketch", "pallas"):
+                raise ValueError(
+                    "substrate='local' peels a budget-bounded candidate "
+                    "subgraph — degree sketching/tiling has nothing to "
+                    "amortize at that scale; use backend='exact' (or 'auto')"
+                )
+            # Compaction is an irrelevant knob at candidate scale: quietly
+            # forced off, like the turnstile runtime.
+            return dataclasses.replace(
+                self,
+                backend="exact" if self.backend == "auto" else self.backend,
                 compaction="off",
             )
         backend = self.backend
@@ -516,6 +577,9 @@ _FIELD_CLASS = {
     "residency_cap_edges": "exempt",
     "stream_mode": "exempt",
     "sample_edges": "exempt",
+    "local_budget": "exempt",
+    "local_rounds": "exempt",
+    "local_alpha": "exempt",
     "cache_dir": "exempt",
 }
 
@@ -1843,6 +1907,7 @@ class Solver:
         degree_fn: Optional[Callable] = None,
         checkpoint_dir: Optional[str] = None,
         resume: bool = False,
+        seed: Optional[int] = None,
     ) -> DenseSubgraphResult:
         """Runs one Problem on one graph.
 
@@ -1854,8 +1919,10 @@ class Solver:
             res.provenance                     # which matrix cell ran
 
         ``mesh`` is required for the mesh substrate;
-        ``checkpoint_dir``/``resume`` apply to streaming; ``degree_fn`` is
-        the legacy custom-degree hook (keys the cache by identity).
+        ``checkpoint_dir``/``resume`` apply to streaming; ``seed`` is
+        required by (and only by) ``substrate='local'`` — the node whose
+        dense neighborhood is wanted; ``degree_fn`` is the legacy
+        custom-degree hook (keys the cache by identity).
         Repeated same-shape solves hit the program cache and never retrace
         (``trace_count``/``cache_hits`` are the observability counters).
         """
@@ -1877,6 +1944,23 @@ class Solver:
         if prob.substrate != "streaming" and (checkpoint_dir is not None or resume):
             raise ValueError(
                 "checkpoint_dir/resume only apply to substrate='streaming'"
+            )
+        if prob.substrate == "local":
+            if mesh is not None:
+                raise ValueError(
+                    "substrate='local' is a host exploration + jit solve; "
+                    "a mesh does not apply"
+                )
+            if degree_fn is not None:
+                raise ValueError(
+                    "degree_fn hooks bind one fixed graph; the local "
+                    "candidate subgraph changes per seed"
+                )
+            return self._solve_local(graph, prob, seed)
+        if seed is not None:
+            raise ValueError(
+                "seed= is the substrate='local' per-seed query knob; "
+                f"substrate={prob.substrate!r} solves the whole graph"
             )
         if prob.stream_mode == "turnstile":
             if degree_fn is not None:
@@ -1971,6 +2055,85 @@ class Solver:
         else:
             out = fn(sh.src, sh.dst, sh.weight, sh.mask)
         return self._wrap(out, prob, sh.n_nodes, mp, hit)
+
+    def _solve_local(
+        self, graph: EdgeList, prob: Problem, seed
+    ) -> DenseSubgraphResult:
+        """Andersen local substrate (``substrate='local'``): pruned-frontier
+        exploration around ``seed`` (core/local.py), then the SAME jit pass
+        body over the bucket-padded candidate subgraph.  The program cache
+        sees an ordinary pow2-bucket 'solve' program — shared with the
+        serving engine's buckets, so repeated queries never retrace.
+
+        The result's bitmaps are scattered back to the ORIGINAL id space
+        (history/passes describe the padded candidate buffer), provenance
+        reports ``substrate='local'``, and ``extras['local']`` carries the
+        exploration counters.  One-shot front door: the CSR build here is
+        O(m) per call — request-rate serving holds a persistent
+        :class:`repro.serve.densest.DensestQueryEngine` instead, which
+        builds the CSR once and batches same-bucket queries."""
+        from repro.core.local import LocalExplorer
+
+        if seed is None:
+            raise ValueError(
+                "substrate='local' answers per-seed queries: "
+                "solve(graph, problem, seed=<node id>)"
+            )
+        explorer = LocalExplorer.from_edgelist(graph)
+        padded, ex = explorer.extract(
+            seed,
+            budget=prob.local_budget,
+            max_rounds=prob.local_rounds,
+            alpha=prob.local_alpha,
+        )
+        sub = self.solve(padded, dataclasses.replace(prob, substrate="jit"))
+        nodes = ex.candidates
+        n = graph.n_nodes
+
+        def lift(bitmap) -> jax.Array:
+            # Padded-buffer bitmap -> original id space (pad ids dropped).
+            row = np.asarray(bitmap)
+            local = np.nonzero(row)[0]
+            local = local[local < len(nodes)]  # isolated pad nodes
+            full = np.zeros(n, bool)
+            full[nodes[local]] = True
+            return jnp.asarray(full)
+
+        best_alive = lift(sub.best_alive)
+        out = PeelOutcome(
+            best_alive=best_alive,
+            best_t=sub.best_t,
+            best_density=sub.best_density,
+            best_size=jnp.sum(best_alive.astype(jnp.int32)),
+            passes=sub.passes,
+            alive=lift(sub.alive),
+            t_alive=sub.t_alive,
+            history_n=sub.history_n,
+            history_m=sub.history_m,
+            history_rho=sub.history_rho,
+        )
+        extras = {
+            "local": {
+                "seed": int(ex.seed),
+                "candidates": nodes,
+                "n_candidates": int(len(nodes)),
+                "m_candidates": int(np.asarray(padded.mask).sum()),
+                "rounds": int(ex.rounds),
+                "nodes_touched": int(ex.nodes_touched),
+                "edges_scanned": int(ex.edges_scanned),
+                "frontier_exhausted": bool(ex.frontier_exhausted),
+                "budget": int(prob.local_budget),
+                "bucket": (int(padded.n_nodes), int(padded.n_edges_padded)),
+            }
+        }
+        return self._wrap(
+            out,
+            prob,
+            n,
+            sub.provenance.max_passes,
+            sub.provenance.cache_hit,
+            extras=extras,
+        )
 
     def _solve_turnstile(
         self, graph: EdgeList, prob: Problem

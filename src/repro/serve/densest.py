@@ -30,10 +30,16 @@ concurrent queries share a handful of compiled programs:
     and a fresh replica loads every bucket program from disk instead of
     compiling (``core/progcache.py``) — the cold-start path tracked by
     ``benchmarks/bench_serve.py``.
-
-The Andersen-style local algorithm (``substrate='local'``, per-query cost
-provably independent of n without a radius knob) is the ROADMAP follow-up;
-this engine is the batching/caching half of the serving item.
+  * **Two extraction modes** behind one knob: ``extraction='bfs'`` (the
+    radius-hop ego-net above) or ``extraction='local'`` — Andersen's
+    pruned-frontier exploration (``core/local.py``, arXiv cs/0702078),
+    whose per-query work is bounded by ``local_budget`` instead of the
+    neighborhood volume, so it stays flat as the graph grows
+    (``benchmarks/bench_serve.py`` tracks the sweep).  Both modes land in
+    the same buckets, batches, and resilience ladder; the shrink degrade
+    rung re-extracts at smaller radius (BFS) or halved budget (local).
+    A ``Problem(substrate='local')`` selects the local mode and supplies
+    its exploration knobs; the solves lower onto jit lanes either way.
 """
 
 from __future__ import annotations
@@ -47,6 +53,12 @@ import numpy as np
 
 from repro import constants, faults
 from repro.core.api import Problem, Solver
+from repro.core.local import (
+    LocalExplorer,
+    check_count,
+    check_seed,
+    induced_padded,
+)
 from repro.graph.edgelist import EdgeList, to_csr
 from repro.graph.partition import pow2_bucket
 from repro.serve.resilience import CircuitBreaker, ResilienceConfig
@@ -58,6 +70,9 @@ __all__ = ["DensestQueryEngine", "QueryResult"]
 # mint more compiled programs.
 _NODE_FLOOR = constants.SERVE_NODE_FLOOR
 _EDGE_FLOOR = constants.SERVE_EDGE_FLOOR
+# Local-extraction budget floor: the shrink degrade rung halves a query's
+# budget down to (not past) this.
+_LOCAL_BUDGET_FLOOR = constants.LOCAL_BUDGET_FLOOR
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,7 +86,8 @@ class QueryResult:
     Failure provenance (the resilience contract, docs/resilience.md):
     ``status`` is ``'ok'`` (the full exact-path answer), ``'degraded'``
     (a real but weaker answer; ``fallback`` names its source —
-    ``'radius:<r>'``, ``'turnstile_density'`` or ``'last_good'``),
+    ``'radius:<r>'``/``'budget:<b>'`` per extraction mode,
+    ``'turnstile_density'`` or ``'last_good'``),
     ``'rejected'`` (shed at admission by a full bounded queue) or
     ``'failed'`` (every fallback exhausted).  ``error`` carries the
     original solve error for every non-``'ok'`` status and ``attempts``
@@ -84,8 +100,8 @@ class QueryResult:
     nodes: np.ndarray  # original-id members of the best set
     density: float
     seed_in_set: bool
-    n_ego: int  # extracted ego-net size (nodes)
-    m_ego: int  # extracted ego-net size (edges)
+    n_ego: int  # extracted subgraph size: nodes (ego-net or candidate set)
+    m_ego: int  # extracted subgraph size: edges
     bucket: Tuple[int, int, int]  # (node bucket, edge bucket, batch lanes)
     latency_s: float  # submit -> answer (engine clock)
     status: str = "ok"  # ok | degraded | rejected | failed
@@ -111,7 +127,8 @@ class QueryResult:
 class _Pending:
     qid: int
     seed: int
-    radius: int
+    radius: int  # BFS extraction (0 under extraction='local')
+    budget: int  # local extraction (0 under extraction='bfs')
     submitted_at: float
 
 
@@ -125,9 +142,20 @@ class DensestQueryEngine:
     are the one-call conveniences.  ``time_fn`` is injectable so deadline
     behavior is testable without sleeping.
 
-    Undirected host graphs only (the directed/local query model arrives
-    with ``substrate='local'``); the Problem must lower onto the jit
-    substrate and — for stacked lanes — a graph-independent backend.
+    Undirected host graphs only; the Problem must lower onto the jit
+    substrate (``Problem(substrate='local')`` is accepted and selects the
+    local extraction — its solves still run as jit lanes) and — for
+    stacked lanes — a graph-independent backend.
+
+    ``extraction`` picks how a query's subgraph is carved out:
+    ``'bfs'`` (default) is the radius-hop ego-net; ``'local'`` is the
+    Andersen pruned-frontier exploration (``core/local.py``) whose
+    per-query work is capped by ``local_budget`` — the per-query override
+    is ``budget=`` (``radius=`` in BFS mode).  Both modes share the
+    buckets, the batching, the resilience ladder, and the QueryResult
+    contract; each lane stays bit-identical to a standalone ``solve()``
+    of the same padded buffer (for the local mode that standalone is
+    ``solve(graph, Problem(substrate='local'), seed=...)``).
     """
 
     def __init__(
@@ -146,17 +174,35 @@ class DensestQueryEngine:
         time_fn: Callable[[], float] = time.monotonic,
         resilience: Optional[ResilienceConfig] = None,
         sleep_fn: Callable[[float], None] = time.sleep,
+        extraction: Optional[str] = None,
+        local_budget: Optional[int] = None,
+        local_rounds: Optional[int] = None,
+        local_alpha: Optional[float] = None,
     ):
         if graph.directed:
             raise ValueError(
-                "DensestQueryEngine serves undirected host graphs; the "
-                "directed per-seed model is the substrate='local' follow-up"
+                "DensestQueryEngine serves undirected host graphs "
+                "(both extraction modes are undirected)"
             )
         problem = problem if problem is not None else Problem.undirected()
+        if problem.substrate == "local":
+            # Problem(substrate='local') IS the local serving spec: apply
+            # its validation (undirected objective, exact backend,
+            # compaction off), inherit its exploration knobs, and lower
+            # the lane solves onto the jit substrate.
+            resolved = problem.resolve(graph.n_nodes)
+            extraction = "local" if extraction is None else extraction
+            if local_budget is None:
+                local_budget = resolved.local_budget
+            if local_rounds is None:
+                local_rounds = resolved.local_rounds
+            if local_alpha is None:
+                local_alpha = resolved.local_alpha
+            problem = dataclasses.replace(resolved, substrate="jit")
         if problem.substrate not in ("jit", "auto"):
             raise ValueError(
-                "per-seed serving batches ego-nets on the jit substrate; "
-                f"substrate={problem.substrate!r} does not apply"
+                "per-seed serving batches extracted subgraphs on the jit "
+                f"substrate; substrate={problem.substrate!r} does not apply"
             )
         if problem.backend == "pallas":
             raise ValueError(
@@ -165,8 +211,18 @@ class DensestQueryEngine:
             )
         if problem.objective == "directed":
             raise ValueError(
-                "ego-net extraction is undirected; directed objectives "
-                "need the substrate='local' follow-up"
+                "per-seed extraction is undirected; directed objectives "
+                "have no serving cell"
+            )
+        extraction = "bfs" if extraction is None else extraction
+        if extraction not in ("bfs", "local"):
+            raise ValueError(
+                f"extraction={extraction!r} not in ('bfs', 'local')"
+            )
+        if extraction == "local" and problem.objective != "undirected":
+            raise ValueError(
+                "extraction='local' prunes its frontier against the "
+                "undirected density; use objective='undirected'"
             )
         if radius < 1:
             raise ValueError(f"radius={radius} must be >= 1")
@@ -176,6 +232,20 @@ class DensestQueryEngine:
             raise ValueError(f"max_wait_ms={max_wait_ms} must be >= 0")
         self.problem = problem
         self.solver = solver if solver is not None else Solver(cache_dir=cache_dir)
+        self.extraction = extraction
+        self.local_budget = check_count(
+            problem.local_budget if local_budget is None else local_budget,
+            "local_budget",
+        )
+        self.local_rounds = check_count(
+            problem.local_rounds if local_rounds is None else local_rounds,
+            "local_rounds",
+        )
+        self.local_alpha = float(
+            problem.local_alpha if local_alpha is None else local_alpha
+        )
+        if self.local_alpha < 0:
+            raise ValueError(f"local_alpha={self.local_alpha} must be >= 0")
         self.radius = int(radius)
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
@@ -190,6 +260,19 @@ class DensestQueryEngine:
         )
         self._member = np.zeros(graph.n_nodes, bool)  # reusable scratch
         self._local_id = np.zeros(graph.n_nodes, np.int32)  # relabel scratch
+        # Local-mode explorer over the SAME CSR arrays (no copy); its own
+        # scratch keeps the BFS path's `_member` usage independent.
+        self._explorer: Optional[LocalExplorer] = (
+            LocalExplorer(
+                self._indptr, self._indices, self._csr_w,
+                n_nodes=graph.n_nodes,
+            )
+            if extraction == "local"
+            else None
+        )
+        # Local-extraction work counters (bench_serve's scaling evidence).
+        self.local_nodes_touched = 0
+        self.local_edges_scanned = 0
         # FIFO admission queue (deque: O(1) popleft, arbitrarily deep).
         self._queue: Deque[_Pending] = collections.deque()
         self._next_qid = 0
@@ -306,60 +389,114 @@ class DensestQueryEngine:
         return np.sort(np.concatenate(layers))
 
     def extract(
-        self, seed: int, radius: Optional[int] = None
+        self,
+        seed: int,
+        radius: Optional[int] = None,
+        *,
+        budget: Optional[int] = None,
     ) -> Tuple[EdgeList, np.ndarray]:
-        """The ego-net of ``seed`` as a bucket-padded EdgeList plus the
-        sorted original ids its compact ids map to (local id i ↔
-        ``nodes[i]``; ids >= ``len(nodes)`` are isolated pad nodes).
+        """The extracted subgraph of ``seed`` — radius-hop ego-net (BFS
+        mode) or pruned-frontier candidate set (local mode) — as a
+        bucket-padded EdgeList plus the sorted original ids its compact
+        ids map to (local id i ↔ ``nodes[i]``; ids >= ``len(nodes)`` are
+        isolated pad nodes).  The padding body is
+        :func:`repro.core.local.induced_padded`, shared with the
+        ``substrate='local'`` front door, so every path solves a
+        bit-identical buffer.
 
         This is THE extraction the engine serves — the sequential baseline
         and the bit-identity tests call it so both sides solve the same
         padded buffer.
         """
-        if not (0 <= seed < self.n_nodes):
-            raise ValueError(f"seed={seed} not in [0, {self.n_nodes})")
-        r = self.radius if radius is None else int(radius)
-        nodes = self._ego_nodes(seed, r)
-        slot_idx, row_src = self._adjacency_rows(nodes)
-        dsts = self._indices[slot_idx].astype(np.int64)
-        # Induced edges, each undirected pair once: the symmetrized CSR
-        # holds (u,v) and (v,u); src<dst keeps exactly one.
-        keep = self._member[dsts] & (row_src < dsts)
-        self._member[nodes] = False  # reset scratch before any return
-        self._local_id[nodes] = np.arange(len(nodes), dtype=np.int32)
-        src_l = self._local_id[row_src[keep]]
-        dst_l = self._local_id[dsts[keep]]
-        w = np.asarray(self._csr_w[slot_idx[keep]], np.float32)
-        m_ego = len(src_l)
-        n_b = pow2_bucket(len(nodes), self.node_floor)
-        m_b = pow2_bucket(max(m_ego, 1), self.edge_floor)
-        src_p = np.zeros(m_b, np.int32)
-        dst_p = np.zeros(m_b, np.int32)
-        w_p = np.zeros(m_b, np.float32)
-        msk = np.zeros(m_b, bool)
-        src_p[:m_ego] = src_l
-        dst_p[:m_ego] = dst_l
-        w_p[:m_ego] = w
-        msk[:m_ego] = True
+        seed = check_seed(seed, self.n_nodes)
+        if self.extraction == "local":
+            if radius is not None:
+                raise ValueError(
+                    "extraction='local' has no radius; the per-query "
+                    "knob is budget="
+                )
+            b = (
+                self.local_budget
+                if budget is None
+                else check_count(budget, "budget")
+            )
+            ex = self._explorer.explore(
+                seed, budget=b, max_rounds=self.local_rounds,
+                alpha=self.local_alpha,
+            )
+            nodes = ex.candidates
+            self.local_nodes_touched += ex.nodes_touched
+            self.local_edges_scanned += ex.edges_scanned
+        else:
+            if budget is not None:
+                raise ValueError(
+                    "budget= only applies to extraction='local'; the "
+                    "BFS per-query knob is radius="
+                )
+            r = (
+                self.radius
+                if radius is None
+                else check_count(radius, "radius")
+            )
+            nodes = self._ego_nodes(seed, r)
+            self._member[nodes] = False  # reset the BFS scratch
         # Buffers stay NUMPY: the device transfer happens at solve time —
         # once per call for a sequential solve(), once per STACKED BATCH
         # on the engine's coalesced path (the transfer is amortized across
         # the whole bucket group; see _process).
-        padded = EdgeList(
-            src=src_p, dst=dst_p, weight=w_p, mask=msk, n_nodes=int(n_b)
+        padded = induced_padded(
+            self._indptr, self._indices, self._csr_w, nodes,
+            self._member, self._local_id,
+            node_floor=self.node_floor, edge_floor=self.edge_floor,
         )
         return padded, nodes
 
     # -- queueing -----------------------------------------------------------
-    def submit(self, seed: int, radius: Optional[int] = None) -> int:
+    def submit(
+        self,
+        seed: int,
+        radius: Optional[int] = None,
+        *,
+        budget: Optional[int] = None,
+    ) -> int:
         """Enqueues a seed query; returns its qid.  Nothing runs until a
         batch is due (``step``) or forced (``flush``).
+
+        Validation happens HERE, at admission (the serving contract): the
+        seed must be a real integer node id in range (bools and floats
+        are rejected — a float used to slip past the range check and
+        silently truncate inside the queue), and the per-query override —
+        ``radius=`` in BFS mode, ``budget=`` in local mode — must be a
+        positive integer matching the engine's extraction mode.
 
         With ``resilience.max_queue`` set, a full admission queue SHEDS the
         query instead of growing without bound: the qid is still returned,
         and the next drain yields a ``status='rejected'`` result for it."""
-        if not (0 <= seed < self.n_nodes):
-            raise ValueError(f"seed={seed} not in [0, {self.n_nodes})")
+        seed = check_seed(seed, self.n_nodes)
+        if self.extraction == "local":
+            if radius is not None:
+                raise ValueError(
+                    "extraction='local' has no radius; the per-query "
+                    "knob is budget="
+                )
+            q_radius = 0
+            q_budget = (
+                self.local_budget
+                if budget is None
+                else check_count(budget, "budget")
+            )
+        else:
+            if budget is not None:
+                raise ValueError(
+                    "budget= only applies to extraction='local'; the "
+                    "BFS per-query knob is radius="
+                )
+            q_radius = (
+                self.radius
+                if radius is None
+                else check_count(radius, "radius")
+            )
+            q_budget = 0
         qid = self._next_qid
         self._next_qid += 1
         cfg = self.resilience
@@ -388,8 +525,7 @@ class DensestQueryEngine:
             return qid
         self._queue.append(
             _Pending(
-                qid=qid, seed=int(seed),
-                radius=self.radius if radius is None else int(radius),
+                qid=qid, seed=seed, radius=q_radius, budget=q_budget,
                 submitted_at=self._time(),
             )
         )
@@ -435,20 +571,30 @@ class DensestQueryEngine:
             )
         return out
 
-    def query(self, seed: int, radius: Optional[int] = None) -> QueryResult:
+    def query(
+        self,
+        seed: int,
+        radius: Optional[int] = None,
+        *,
+        budget: Optional[int] = None,
+    ) -> QueryResult:
         """One synchronous query (submit + flush)."""
-        qid = self.submit(seed, radius)
+        qid = self.submit(seed, radius, budget=budget)
         for res in self.flush():
             if res.qid == qid:
                 return res
         raise RuntimeError(f"query {qid} lost in flush")  # pragma: no cover
 
     def query_many(
-        self, seeds: Sequence[int], radius: Optional[int] = None
+        self,
+        seeds: Sequence[int],
+        radius: Optional[int] = None,
+        *,
+        budget: Optional[int] = None,
     ) -> List[QueryResult]:
         """Answers many seeds through the batched path; results in seed
         order."""
-        qids = [self.submit(s, radius) for s in seeds]
+        qids = [self.submit(s, radius, budget=budget) for s in seeds]
         by_qid = {r.qid: r for r in self.flush()}
         return [by_qid[q] for q in qids]
 
@@ -512,15 +658,37 @@ class DensestQueryEngine:
                 breaker.record_success(gkey)
             return res, None, attempts
 
-    def _radius_fallback(
+    def _extract_pending(self, q: _Pending) -> Tuple[EdgeList, np.ndarray]:
+        if self.extraction == "local":
+            return self.extract(q.seed, budget=q.budget)
+        return self.extract(q.seed, q.radius)
+
+    def _shrink_rungs(self, q: _Pending) -> List[Tuple[str, int]]:
+        """The shrink ladder for one query: decreasing radii (BFS mode) or
+        halving budgets down to the floor (local mode)."""
+        if self.extraction == "local":
+            rungs = []
+            b = q.budget // 2
+            while b >= _LOCAL_BUDGET_FLOOR:
+                rungs.append(("budget", b))
+                b //= 2
+            return rungs
+        return [("radius", r) for r in range(q.radius - 1, 0, -1)]
+
+    def _shrink_fallback(
         self, q: _Pending, err: str, attempts: int
     ) -> Optional[QueryResult]:
-        """The first degrade rung: re-extract at shrinking radius and solve
-        each ego-net as a single (unbatched) program.  Real data or None."""
-        for r in range(q.radius - 1, 0, -1):
+        """The first degrade rung: re-extract a SMALLER subgraph —
+        shrinking radius under BFS extraction, halving budget (down to the
+        LOCAL_BUDGET_FLOOR) under local extraction — and solve each as a
+        single (unbatched) program.  Real data or None."""
+        for kind, v in self._shrink_rungs(q):
             try:
-                padded, nodes = self.extract(q.seed, r)
-                faults.fire("serve.solve", key=("fallback", q.qid, r))
+                if kind == "budget":
+                    padded, nodes = self.extract(q.seed, budget=v)
+                else:
+                    padded, nodes = self.extract(q.seed, v)
+                faults.fire("serve.solve", key=("fallback", q.qid, v))
                 res = self.solver.solve(padded, self.problem)
             except Exception:  # noqa: BLE001 — try the next rung down
                 attempts += 1
@@ -538,7 +706,7 @@ class DensestQueryEngine:
                 bucket=(int(padded.n_nodes), int(padded.n_edges_padded), 1),
                 latency_s=float(self._time() - q.submitted_at),
                 status="degraded",
-                fallback=f"radius:{r}",
+                fallback=f"{kind}:{v}",
                 error=err,
                 attempts=attempts,
             )
@@ -559,8 +727,13 @@ class DensestQueryEngine:
         fabricated (docs/resilience.md)."""
         cfg = self.resilience
         if cfg is not None:
-            if cfg.degrade_radius and q.radius > 1:
-                res = self._radius_fallback(q, err, attempts)
+            can_shrink = (
+                q.budget > _LOCAL_BUDGET_FLOOR
+                if self.extraction == "local"
+                else q.radius > 1
+            )
+            if cfg.degrade_radius and can_shrink:
+                res = self._shrink_fallback(q, err, attempts)
                 if res is not None:
                     self.queries_degraded += 1
                     return res
@@ -626,7 +799,7 @@ class DensestQueryEngine:
         groups: Dict[Tuple[int, int], List[Tuple[_Pending, EdgeList, np.ndarray]]]
         groups = {}
         for q in batch:
-            padded, nodes = self.extract(q.seed, q.radius)
+            padded, nodes = self._extract_pending(q)
             key = (padded.n_nodes, padded.n_edges_padded)
             groups.setdefault(key, []).append((q, padded, nodes))
         results: List[QueryResult] = []
@@ -711,6 +884,8 @@ class DensestQueryEngine:
             "queries_degraded": self.queries_degraded,
             "queries_failed": self.queries_failed,
             "solve_retries": self.solve_retries,
+            "local_nodes_touched": self.local_nodes_touched,
+            "local_edges_scanned": self.local_edges_scanned,
             "breaker_open_skips": self.breaker_open_skips,
             "deadline_stops": self.deadline_stops,
             "breaker_opened": (

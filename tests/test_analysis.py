@@ -57,6 +57,7 @@ def test_tree_is_clean():
     assert findings == [], "\n".join(render_finding(f) for f in findings)
 
 
+@pytest.mark.slow
 def test_cli_strict_exits_zero():
     proc = subprocess.run(
         [sys.executable, os.path.join(REPO, "scripts", "analyze.py"), "--strict"],
@@ -67,6 +68,7 @@ def test_cli_strict_exits_zero():
     assert proc.returncode == 0, proc.stdout + proc.stderr
 
 
+@pytest.mark.slow
 def test_cli_lists_every_rule():
     proc = subprocess.run(
         [

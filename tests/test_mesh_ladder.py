@@ -328,6 +328,7 @@ _LADDER_8DEV_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
 def test_mesh_ladder_equivalence_8_devices():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(

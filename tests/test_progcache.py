@@ -76,6 +76,7 @@ def test_disk_cache_serves_the_compaction_ladder(tmp_path):
     assert float(r1.best_density) == float(r2.best_density)
 
 
+@pytest.mark.slow
 def test_disk_cache_round_trip_fresh_subprocess(tmp_path):
     """The cold-start win itself: a brand-new PROCESS compiles nothing."""
     d = str(tmp_path / "cache")

@@ -1,0 +1,181 @@
+"""Cross-substrate property harness for per-seed serving (ISSUE 10).
+
+One contract, checked for EVERY extraction mode (``'bfs'`` and
+``'local'``) over random graphs × random seeds:
+
+  * the seed is always in the extracted candidate set, and the answer is
+    a subset of it; ``QueryResult.seed_in_set`` truthfully reports
+    whether the peel kept the seed;
+  * the returned density never exceeds the exact (brute-force) optimum
+    of the WHOLE graph — locality can only lose density, never invent
+    it — and clears the documented surviving envelope: a (2+2eps)
+    approximation of the densest subgraph INSIDE the extracted set
+    (core/local.py module docstring);
+  * ``query()`` is bit-reproducible across two fresh engines (fresh
+    Solvers, same graph): float-equal density, identical node sets.
+
+The checks live in :func:`_check_contract`, exercised two ways: a fixed
+pseudo-random corpus (always runs, keeps the contract in tier-1 even
+where hypothesis is not installed) and a hypothesis strategy sweeping
+adversarial shapes (CI).  The local mode additionally pins engine
+answers bitwise to the ``substrate='local'`` api front door.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import Problem, Solver, densest_subgraph_brute, solve
+from repro.graph import from_numpy
+from repro.serve.densest import DensestQueryEngine
+
+EPS = 0.5
+PROB = Problem.undirected(eps=EPS, compaction="off")
+PROB_LOCAL = dataclasses.replace(PROB, substrate="local")
+MODES = ("bfs", "local")
+
+# Shared across examples so each (bucket, problem) compiles once per
+# solver; two DISTINCT solvers make the reproducibility check honest
+# (nothing shared below the engine surface).
+_S1, _S2, _S_API = Solver(), Solver(), Solver()
+
+
+def _random_graph(rng: np.random.Generator):
+    n = int(rng.integers(4, 13))
+    m = int(rng.integers(3, 31))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    if keep.sum() == 0:
+        src, dst, keep = np.asarray([0]), np.asarray([1]), np.asarray([True])
+    return from_numpy(src[keep], dst[keep], n)
+
+
+def _induced(g, nodes):
+    """Compact induced subgraph of ``nodes`` (reference, set-based)."""
+    member = np.zeros(g.n_nodes, bool)
+    member[nodes] = True
+    local = np.zeros(g.n_nodes, np.int64)
+    local[nodes] = np.arange(len(nodes))
+    mask = np.asarray(g.mask)
+    src = np.asarray(g.src)[mask]
+    dst = np.asarray(g.dst)[mask]
+    w = np.asarray(g.weight)[mask]
+    keep = member[src] & member[dst]
+    return from_numpy(
+        local[src[keep]], local[dst[keep]], len(nodes), weight=w[keep]
+    )
+
+
+def _engine(g, mode, solver):
+    return DensestQueryEngine(
+        g, PROB, solver=solver, extraction=mode, max_wait_ms=0.0
+    )
+
+
+def _check_contract(g, seed, mode):
+    e1 = _engine(g, mode, _S1)
+    e2 = _engine(g, mode, _S2)
+    r1 = e1.query(seed)
+    r2 = e2.query(seed)
+    assert r1.status == "ok"
+
+    # Extraction containment: the seed is in the candidate set and the
+    # answer never leaves it.  (The PEEL may drop the seed — that is what
+    # seed_in_set reports — but the extraction never does.)
+    if mode == "local":
+        _, cand = e1.extract(seed, budget=e1.local_budget)
+    else:
+        _, cand = e1.extract(seed, e1.radius)
+    cand_set = set(cand.tolist())
+    assert seed in cand_set
+    assert set(r1.nodes.tolist()) <= cand_set
+    assert r1.seed_in_set == (seed in set(r1.nodes.tolist()))
+
+    # Surviving guarantee: density <= whole-graph exact optimum, and
+    # >= (exact optimum INSIDE the extracted set) / (2 + 2 eps).
+    _, rho_star = densest_subgraph_brute(g)
+    assert r1.density <= rho_star + 1e-4
+    sub = _induced(g, cand)
+    if int(np.asarray(sub.mask).sum()) > 0:
+        _, rho_local = densest_subgraph_brute(sub)
+        assert r1.density >= rho_local / (2 * (1 + EPS)) - 1e-4
+    else:
+        assert r1.density == 0.0
+
+    # Bit-reproducibility across fresh engines + fresh solvers.
+    assert r1.density == r2.density
+    np.testing.assert_array_equal(r1.nodes, r2.nodes)
+
+    # The local engine is the api front door, bit for bit.
+    if mode == "local":
+        api = _S_API.solve(g, PROB_LOCAL, seed=seed)
+        assert r1.density == float(api.best_density)
+        np.testing.assert_array_equal(
+            r1.nodes, np.flatnonzero(np.asarray(api.best_alive))
+        )
+
+
+# ---------------------------------------------------------------------------
+# fixed corpus: always runs (tier-1), no hypothesis required
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_contract_fixed_corpus(mode):
+    rng = np.random.default_rng(1234)
+    for _ in range(6):
+        g = _random_graph(rng)
+        for seed in {0, int(rng.integers(0, g.n_nodes))}:
+            _check_contract(g, seed, mode)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: adversarial shapes (CI installs hypothesis)
+# ---------------------------------------------------------------------------
+
+# A try/import (not module-level importorskip) so the fixed corpus above
+# STAYS in tier-1 where hypothesis is absent.
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised where hypothesis is absent
+
+    @pytest.mark.skip(reason="hypothesis not installed; property sweep skipped")
+    def test_property_serve_contract():
+        raise AssertionError("unreachable")
+
+else:
+
+    @st.composite
+    def graph_and_seed(draw):
+        n = draw(st.integers(4, 12))
+        m = draw(st.integers(3, 30))
+        src = draw(
+            st.lists(st.integers(0, n - 1), min_size=m, max_size=m).map(
+                np.asarray
+            )
+        )
+        dst = draw(
+            st.lists(st.integers(0, n - 1), min_size=m, max_size=m).map(
+                np.asarray
+            )
+        )
+        keep = src != dst
+        if keep.sum() == 0:
+            src = np.asarray([0])
+            dst = np.asarray([1])
+            keep = np.asarray([True])
+        return from_numpy(src[keep], dst[keep], n), draw(
+            st.integers(0, n - 1)
+        )
+
+    @given(graph_and_seed(), st.sampled_from(MODES))
+    @settings(
+        max_examples=8,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    def test_property_serve_contract(gs, mode):
+        g, seed = gs
+        _check_contract(g, seed, mode)

@@ -293,6 +293,35 @@ def test_validation():
         _engine(g).extract(-1)
 
 
+def test_submit_rejects_bad_seeds_eagerly():
+    """Regression: ``submit`` validates the seed AT SUBMIT time, not at
+    flush — a float seed used to slip past the range check, truncate
+    silently inside the numpy extraction, and answer for the wrong node."""
+    g = _graph(n=300)
+    eng = _engine(g)
+    for bad in (2.5, np.float64(2.0), True, np.bool_(False), "5", None):
+        with pytest.raises(TypeError, match="seed"):
+            eng.submit(bad)
+    for bad in (-1, 300, np.int64(10_000)):
+        with pytest.raises(ValueError, match="seed"):
+            eng.submit(bad)
+    # Nothing bad was enqueued: the healthy np-integer seed still answers.
+    qid = eng.submit(np.int64(5))
+    (res,) = eng.flush()
+    assert res.qid == qid and res.status == "ok"
+
+
+def test_per_query_knob_validation():
+    g = _graph(n=300)
+    eng = _engine(g)
+    with pytest.raises(ValueError, match="radius"):
+        eng.submit(5, 0)
+    with pytest.raises(TypeError, match="radius"):
+        eng.submit(5, 1.5)
+    with pytest.raises(ValueError, match="budget"):
+        eng.submit(5, budget=16)  # budget is the local-extraction knob
+
+
 def test_works_with_at_least_k_objective():
     g = _graph(n=400, seed=4)
     prob = Problem.at_least_k(k=4, eps=EPS, compaction="off")
